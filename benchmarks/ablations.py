@@ -1,0 +1,46 @@
+"""Beyond-paper ablations of HieAvg's own knobs.
+
+The paper fixes γ0 = λ = 0.9 and never ablates them, and (per
+EXPERIMENTS.md) its eq. (4) normalization matters enormously.  Three
+sweeps, all under permanent stragglers (the stress case):
+
+  a) γ0 sweep            — how much estimated-weight should count at k'=1
+  b) λ sweep             — how fast the trust in the estimate decays
+  c) faithful vs normalized eq. (4), and straggler-fraction × aggregator
+"""
+from __future__ import annotations
+
+from repro.fl import BHFLSimulator
+
+from .common import Csv, paper_lr_setting, sim_kwargs
+
+
+def main() -> dict:
+    out = {}
+    csv = Csv("ablations")
+    csv.row("ablation", "value", "final_acc", "best_acc")
+    base = paper_lr_setting()
+
+    def run(tag, value, s, **kw):
+        r = BHFLSimulator(s, kw.pop("agg", "hieavg"), "permanent",
+                          "permanent", **sim_kwargs(**kw)).run()
+        csv.row(tag, value, f"{r.accuracy[-1]:.4f}", f"{r.accuracy.max():.4f}")
+        out[(tag, value)] = r.accuracy
+
+    import dataclasses
+    for g0 in (0.3, 0.6, 0.9, 0.99):
+        run("gamma0", g0, dataclasses.replace(base, gamma0=g0))
+    for lam in (0.5, 0.9, 0.99):
+        run("lambda", lam, dataclasses.replace(base, lam=lam))
+    run("eq4_faithful", "normalize=False", base, normalize=False)
+    run("eq4_normalized", "normalize=True", base, normalize=True)
+    for frac in (0.2, 0.4):
+        s = dataclasses.replace(base, straggler_frac=frac)
+        for agg in ("hieavg", "t_fedavg"):
+            run(f"frac_{frac}", agg, s, agg=agg)
+    csv.done()
+    return out
+
+
+if __name__ == "__main__":
+    main()

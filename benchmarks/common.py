@@ -1,0 +1,62 @@
+"""Shared benchmark plumbing: budget control + CSV emission."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+
+from repro.configs.bhfl_cnn import REDUCED, BHFLSetting
+
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+
+# Benchmark budget: FULL reproduces the paper's round counts; the default
+# is a CPU-friendly reduction that preserves every qualitative claim.
+T_ROUNDS = 100 if FULL else 30
+N_TRAIN = 6000 if FULL else 2000
+N_TEST = 1000 if FULL else 400
+STEPS = 10
+STOP_ROUND = 40 if FULL else 10
+
+
+def setting(**kw) -> BHFLSetting:
+    base = dataclasses.replace(REDUCED, t_global_rounds=T_ROUNDS,
+                               permanent_stop_round=STOP_ROUND)
+    return dataclasses.replace(base, **kw)
+
+
+def paper_lr_setting(**kw) -> BHFLSetting:
+    """Paper-faithful learning rate (Sec. 6.1.5: 0.001, decay 0.9).
+
+    HieAvg's delta extrapolation assumes smooth per-round weight drift;
+    with the surrogate-tuned large rate (0.02) the extrapolated estimates
+    are noisy enough that plain T_FedAvg wins under permanent stragglers —
+    the aggregator comparisons (fig2/fig56) therefore run at the paper's
+    own rate, where the paper's ordering reproduces.  The lr-sensitivity
+    itself is reported in EXPERIMENTS.md.
+    """
+    base = dataclasses.replace(REDUCED, t_global_rounds=max(T_ROUNDS, 40),
+                               permanent_stop_round=STOP_ROUND,
+                               lr0=1e-3, lr_decay=0.9)
+    return dataclasses.replace(base, **kw)
+
+
+def sim_kwargs(**kw) -> dict:
+    out = dict(n_train=N_TRAIN, n_test=N_TEST, steps_per_epoch=STEPS,
+               normalize=True)
+    out.update(kw)
+    return out
+
+
+class Csv:
+    def __init__(self, name: str):
+        self.name = name
+        self.t0 = time.time()
+        print(f"# --- {name} ---")
+
+    def row(self, *cells):
+        print(",".join(str(c) for c in cells))
+        sys.stdout.flush()
+
+    def done(self):
+        print(f"# {self.name}: {time.time() - self.t0:.1f}s")

@@ -1,0 +1,33 @@
+"""Fig. 2 — HieAvg vs W/O-Stragglers vs T_FedAvg vs D_FedAvg, under
+permanent (a) and temporary (b) stragglers."""
+from __future__ import annotations
+
+from repro.fl import BHFLSimulator
+
+from .common import Csv, paper_lr_setting, sim_kwargs
+
+
+def main() -> dict:
+    out = {}
+    csv = Csv("fig2_convergence")
+    csv.row("straggler_kind", "aggregator", "final_acc", "best_acc",
+            "mean_last5")
+    s = paper_lr_setting()
+    for kind in ("permanent", "temporary"):
+        runs = {}
+        runs["wo_stragglers"] = BHFLSimulator(
+            s, "fedavg", "none", "none", **sim_kwargs()).run()
+        for agg in ("hieavg", "t_fedavg", "d_fedavg"):
+            runs[agg] = BHFLSimulator(s, agg, kind, kind,
+                                      **sim_kwargs()).run()
+        for name, r in runs.items():
+            csv.row(kind, name, f"{r.accuracy[-1]:.4f}",
+                    f"{r.accuracy.max():.4f}",
+                    f"{r.accuracy[-5:].mean():.4f}")
+        out[kind] = {k: v.accuracy for k, v in runs.items()}
+    csv.done()
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Fig. 3 — parameter sweeps (J devices, N edges, K edge rounds, straggler
+count) on HieAvg with temporary stragglers."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.fl import BHFLSimulator
+
+from .common import FULL, Csv, setting, sim_kwargs
+
+
+def main() -> dict:
+    out = {}
+    csv = Csv("fig3_sweeps")
+    csv.row("param", "value", "final_acc", "best_acc")
+
+    def run(name, value, s, **kw):
+        # steps_per_epoch=None -> one epoch over each device's own shard
+        # (paper Sec. 6.1.5) so J/N sweeps hold the total data budget fixed
+        r = BHFLSimulator(s, "hieavg", "temporary", "temporary",
+                          **sim_kwargs(steps_per_epoch=None, **kw)).run()
+        csv.row(name, value, f"{r.accuracy[-1]:.4f}",
+                f"{r.accuracy.max():.4f}")
+        out[(name, value)] = r.accuracy
+
+    for j in ((3, 5, 8) if FULL else (3, 5, 8)):
+        run("J_devices", j, setting(j_per_edge=j))
+    for n in (3, 5, 8):
+        run("N_edges", n, setting(n_edges=n))
+    for k in (1, 2, 4):
+        run("K_edge_rounds", k, setting(k_edge_rounds=k))
+    for frac in (0.2, 0.4):
+        run("straggler_frac", frac, setting(straggler_frac=frac))
+    csv.done()
+    return out
+
+
+if __name__ == "__main__":
+    main()

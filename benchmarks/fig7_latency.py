@@ -1,0 +1,49 @@
+"""Fig. 7 — (a) computing/communication latency vs per-device data size;
+(b) optimal K* vs blockchain consensus latency.
+
+The latency numbers use the paper's measured constants (1.67 s local
+training at 2400 images, 0.51 s device<->edge transfer of a 20 KB model,
+0.05 s edge<->edge link — Sec. 6.2.2) through the Sec. 5.1 model.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (BoundParams, LatencyParams, RaftChain, omega_bound,
+                        optimize_k)
+
+from .common import Csv
+
+
+def main() -> dict:
+    out = {}
+    csv = Csv("fig7_latency")
+
+    # (a) latency vs data size: compute scales linearly with images/device
+    csv.row("images_per_device", "compute_s", "comm_s", "round_total_s")
+    for imgs in (600, 1200, 2400, 4800):
+        lp = 1.67 * imgs / 2400.0       # paper: 1.67 s at 2400 images
+        lm = 0.51                       # 20 KB model transfer
+        csv.row(imgs, f"{lp:.3f}", f"{lm:.3f}", f"{2 * lm + lp:.3f}")
+        out[("latency", imgs)] = 2 * lm + lp
+
+    # (b) K* vs consensus latency (constraint C2 pushes K* up)
+    csv.row("consensus_latency_s", "k_star", "total_latency_s")
+    bp = BoundParams()
+    p = LatencyParams()
+    chain = RaftChain(p.N)
+    base_lbc = chain.consensus_latency()
+    for mult in (1, 5, 10, 20, 40):
+        lbc = base_lbc * mult
+        res = optimize_k(p, lambda k: omega_bound(k, bp), omega_bar=25.0,
+                         consensus_latency=lbc)
+        k = res.k_star if res else -1
+        lat = res.latency if res else float("nan")
+        csv.row(f"{lbc:.3f}", k, f"{lat:.1f}")
+        out[("kstar", round(lbc, 3))] = k
+    csv.done()
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,144 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape × mesh):
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+Sources: ``compiled.cost_analysis()`` (FLOPs, bytes) and the HLO collective
+census from ``repro.launch.dryrun``.  Hardware: TPU v5e — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+IMPORTANT unit notes:
+ * cost_analysis and the HLO census are PER-PARTITION (SPMD module), so
+   terms divide by per-chip rates only.
+ * XLA's HloCostAnalysis counts a while (scan) body ONCE, so raw HLO FLOPs
+   undercount layer-scanned models by ~n_layers.  The collective census is
+   while-aware (dryrun multiplies by trip counts).  For compute we use the
+   analytic MODEL_FLOPS (with a remat factor for training); for memory we
+   scale HLO bytes by the analytic/HLO flops ratio (the scan-body
+   correction; embed/unembed traffic outside the scan is small).
+   ``hlo_flops`` is reported as the body-once lower bound.
+ * MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE) is the *useful* math;
+   the HFL train step additionally pays the remat recompute (~+2·N·D).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.models import INPUT_SHAPES, count_params, param_specs
+
+
+def active_params(arch: str) -> float:
+    """Parameters touched per token (MoE: shared + top-k routed + attn)."""
+    cfg = get_config(arch)
+    total = count_params(param_specs(cfg))
+    if cfg.moe is None:
+        return float(total)
+    m = cfg.moe
+    fe = m.d_expert or cfg.d_ff
+    per_expert = 3 * cfg.d_model * fe
+    routed_total = cfg.n_layers * m.n_experts * per_expert
+    routed_active = cfg.n_layers * m.top_k * per_expert
+    return float(total - routed_total + routed_active)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6·N_active·D for training; 2·N_active·D for inference forward."""
+    shape = INPUT_SHAPES[shape_name]
+    n_act = active_params(arch)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        # the HFL step runs one local SGD step per client: fwd+bwd = 6ND
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch
+
+
+def roofline_row(rec: dict) -> dict:
+    chips = 512 if rec["mesh"] == "2x16x16" else 256
+    hlo_flops = rec.get("flops", 0.0)        # per-partition, body-once
+    hbm = rec.get("hlo_bytes", 0.0)          # per-partition, body-once
+    coll = rec.get("collectives", {}).get("total_bytes", 0)  # while-aware
+
+    shape = INPUT_SHAPES[rec["shape"]]
+    remat = 8.0 / 6.0 if shape.kind == "train" else 1.0
+    mf = model_flops(rec["arch"], rec["shape"]) / chips      # useful/chip
+    exec_flops = mf * remat                                  # executed/chip
+    # scan-body correction for memory traffic (see module docstring)
+    scale = min(max(exec_flops / hlo_flops, 1.0), 128.0) if hlo_flops > 0 \
+        else 1.0
+
+    t_compute = exec_flops / PEAK_FLOPS_BF16
+    t_memory = hbm * scale / HBM_BW
+    t_coll = coll / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    total = t_compute + t_memory + t_coll
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_chip": mf, "hlo_flops": hlo_flops,
+        "useful_ratio": mf / exec_flops,
+        "roofline_frac": t_compute / total if total > 0 else float("nan"),
+        "mem_gib": rec.get("bytes_per_device", 0) / 2**30,
+    }
+
+
+def load_results(paths: list[str]) -> list[dict]:
+    """Merge dry-run JSONs; later files override earlier (arch,shape,mesh)."""
+    merged: dict = {}
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        for rec in json.load(open(p)):
+            merged[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    return list(merged.values())
+
+
+DEFAULT_FILES = ["dryrun_results.json", "dryrun_dsv2.json",
+                 "dryrun_grok.json", "dryrun_grok_train.json",
+                 "dryrun_dsv2_train.json", "dryrun_rg.json",
+                 "dryrun_perf.json"]
+
+
+def main(argv=None) -> list[dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--files", nargs="*", default=DEFAULT_FILES)
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+
+    rows = []
+    print("# --- roofline ---")
+    print("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,dominant,"
+          "roofline_frac,mem_GiB")
+    for rec in sorted(load_results(args.files),
+                      key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if "skipped" in rec:
+            print(f"{rec['arch']},{rec['shape']},{rec['mesh']},"
+                  f"SKIP({rec['skipped'][:40]}...)")
+            continue
+        if "error" in rec:
+            print(f"{rec['arch']},{rec['shape']},{rec['mesh']},"
+                  f"ERROR({rec['error'][:60]})")
+            continue
+        r = roofline_row(rec)
+        rows.append(r)
+        print(f"{r['arch']},{r['shape']},{r['mesh']},"
+              f"{r['t_compute_s']:.4f},{r['t_memory_s']:.4f},"
+              f"{r['t_collective_s']:.4f},{r['dominant']},"
+              f"{r['roofline_frac']:.3f},{r['mem_gib']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

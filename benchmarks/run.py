@@ -1,0 +1,41 @@
+"""Benchmark entry point: one harness per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run            # reduced budget
+  BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run
+  PYTHONPATH=src python -m benchmarks.run --only fig2,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (ablations, fig2_convergence, fig3_sweeps,
+               fig4_heterogeneity, fig56_single_layer, fig7_latency,
+               kernel_bench, roofline)
+
+SUITES = {
+    "fig2": fig2_convergence.main,
+    "fig3": fig3_sweeps.main,
+    "fig4": fig4_heterogeneity.main,
+    "fig56": fig56_single_layer.main,
+    "fig7": fig7_latency.main,
+    "ablations": ablations.main,
+    "kernels": kernel_bench.main,
+    "roofline": lambda: roofline.main([]),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(SUITES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    t0 = time.time()
+    for name in names:
+        SUITES[name]()
+    print(f"# all benchmarks done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Latency optimization walkthrough (paper Sec. 5 / Fig. 7).
+
+Sweeps blockchain consensus latency and shows how the optimal number of
+edge-aggregation rounds K* responds (constraint C2: consensus must hide
+inside the K-round edge window), then prints the full feasibility table
+for one setting.
+
+  PYTHONPATH=src python examples/latency_optimization.py
+"""
+import numpy as np
+
+from repro.core import (BoundParams, LatencyParams, RaftChain, RaftParams,
+                        edge_window, omega_bound, optimize_k, total_latency)
+
+bp = BoundParams()
+lp = LatencyParams()          # paper's measured Raspberry Pi / EC2 numbers
+
+print("consensus_latency -> K*  (total latency)")
+for link in (0.05, 0.2, 0.5, 1.0, 2.0):
+    chain = RaftChain(lp.N, RaftParams(link_latency=link))
+    lbc = chain.consensus_latency()
+    res = optimize_k(lp, lambda k: omega_bound(k, bp), omega_bar=25.0,
+                     consensus_latency=lbc)
+    if res:
+        print(f"  L_bc={lbc:5.2f}s -> K*={res.k_star}  "
+              f"({res.latency:8.1f}s)")
+    else:
+        print(f"  L_bc={lbc:5.2f}s -> infeasible")
+
+print("\nfeasibility table (L_bc = 0.45s):")
+print("  K   L(K)       edge_window  omega(K)   feasible")
+res = optimize_k(lp, lambda k: omega_bound(k, bp), omega_bar=25.0,
+                 consensus_latency=0.45, k_max=10)
+for k in range(1, 11):
+    om = omega_bound(k, bp)
+    print(f"  {k:2d}  {total_latency(k, lp):9.1f}  {edge_window(k, lp):6.2f}s"
+          f"      {om:8.3f}   {bool(res.feasible[k - 1])}")
+print(f"\nK* = {res.k_star}")

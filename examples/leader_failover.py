@@ -1,0 +1,27 @@
+"""Single-point-of-failure drill — the paper's core motivation for BHFL.
+
+A centralized HFL deployment halts if the aggregation server dies.  Here
+the Raft leader crashes mid-training: the consortium re-elects among the
+surviving edge servers, the failed edge becomes a permanent straggler
+(HieAvg estimates its submissions), and training finishes every round
+with an intact block chain.
+
+  PYTHONPATH=src python examples/leader_failover.py
+"""
+import dataclasses
+
+from repro.configs.bhfl_cnn import REDUCED
+from repro.fl import BHFLSimulator
+
+setting = dataclasses.replace(REDUCED, t_global_rounds=16)
+sim = BHFLSimulator(setting, "hieavg", "temporary", "temporary",
+                    normalize=True, fail_leader_at=8,
+                    n_train=2000, n_test=400, steps_per_epoch=8)
+r = sim.run(progress=True)
+
+print(f"\nleader crashed at round 8 — training continued:")
+print(f"  rounds completed : {len(r.accuracy)}/{setting.t_global_rounds}")
+print(f"  blocks committed : {r.blocks} (chain valid: {r.chain_valid})")
+print(f"  surviving edges  : {int(sim.chain.alive.sum())}/{sim.N} "
+      f"(new leader: edge {sim.chain.leader})")
+print(f"  final accuracy   : {r.accuracy[-1]:.3f}")

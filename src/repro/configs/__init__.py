@@ -1,0 +1,45 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``get_smoke(arch_id)``.
+
+Every assigned architecture is a selectable config (``--arch <id>`` in the
+launch scripts).  IDs use the assignment spelling (dashes/dots).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.models import ArchConfig
+
+_MODULES = {
+    "deepseek-7b": "deepseek_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "minicpm3-4b": "minicpm3_4b",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite_16b",
+    "grok-1-314b": "grok_1_314b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "qwen3-14b": "qwen3_14b",
+    "llama-3.2-vision-11b": "llama_3_2_vision_11b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "mamba2-130m": "mamba2_130m",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _mod(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {list(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    """Full (production) config for an assigned architecture."""
+    return _mod(arch_id).FULL
+
+
+def get_smoke(arch_id: str) -> ArchConfig:
+    """Reduced same-family variant (≤2-5 layers, d_model≤512, ≤4 experts)."""
+    return _mod(arch_id).make_smoke()
+
+
+def all_configs() -> dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

@@ -1,0 +1,41 @@
+"""The paper's own experimental model (Sec. 6.1.5): a small CNN for the
+MNIST-surrogate BHFL experiments — 2 conv layers, 1 max-pool, 1 dense.
+
+Not part of the assigned-architecture grid; used by the FL simulator and
+the Fig. 2-7 benchmark repros.
+"""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class BHFLSetting:
+    """Sec. 6.1.1 basic setting."""
+    n_edges: int = 5
+    j_per_edge: int = 5
+    k_edge_rounds: int = 2          # K
+    t_global_rounds: int = 50       # T
+    t_cold_boot: int = 2            # T_c
+    gamma0: float = 0.9
+    lam: float = 0.9
+    lr0: float = 1e-3
+    lr_decay: float = 0.90
+    batch_size: int = 32
+    straggler_frac: float = 0.2     # 20% per layer
+    image_hw: int = 28
+    cnn_c1: int = 32                # paper's conv widths (Sec. 6.1.5)
+    cnn_c2: int = 64
+    n_classes: int = 10
+    classes_per_device: int = 1     # non_IID_1
+    permanent_stop_round: int = 40
+    seed: int = 0
+
+
+DEFAULT = BHFLSetting()
+
+# CPU-budget setting for the benchmark repros: same topology/rounds as the
+# paper, smaller images/CNN so a full Fig. 2 sweep runs in minutes.  The
+# paper's qualitative claims (straggler robustness ordering, K/J/N trends)
+# are width-independent.
+REDUCED = BHFLSetting(image_hw=14, cnn_c1=8, cnn_c2=16, batch_size=16,
+                      lr0=0.02, lr_decay=0.3)
+

@@ -1,0 +1,22 @@
+"""Core library: the paper's contribution (HieAvg, stragglers, Raft, latency)."""
+from .hieavg import (History, init_history, update_history, edge_aggregate,
+                     global_aggregate, edge_aggregate_cold,
+                     global_aggregate_cold)
+from .baselines import fedavg, t_fedavg, d_fedavg
+from .straggler import no_stragglers, permanent, temporary, from_fraction
+from .blockchain import Block, RaftChain, RaftParams
+from .latency import (LatencyParams, shannon_rate, comm_latency,
+                      compute_latency, total_latency, edge_window, optimize_k,
+                      KOptResult)
+from .convergence import BoundParams, omega_bound
+
+__all__ = [
+    "History", "init_history", "update_history", "edge_aggregate",
+    "global_aggregate", "edge_aggregate_cold", "global_aggregate_cold",
+    "fedavg", "t_fedavg", "d_fedavg",
+    "no_stragglers", "permanent", "temporary", "from_fraction",
+    "Block", "RaftChain", "RaftParams",
+    "LatencyParams", "shannon_rate", "comm_latency", "compute_latency",
+    "total_latency", "edge_window", "optimize_k", "KOptResult",
+    "BoundParams", "omega_bound",
+]

@@ -1,0 +1,68 @@
+"""Benchmark aggregation methods from Sec. 6.1.6.
+
+  * ``fedavg``   — plain (weighted) mean of all submissions; with a full mask
+                   this is the W/O-Stragglers oracle.
+  * ``t_fedavg`` — only timely submissions are averaged (stragglers dropped).
+  * ``d_fedavg`` — stragglers represented by their last submitted weights,
+                   verbatim (no delta extrapolation, no decay).
+
+All share HieAvg's stacked-pytree convention so the simulator can swap them.
+``d_fedavg`` keeps a plain last-weights store (reusing ``History.prev_w``).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .hieavg import History, _bshape, init_history  # noqa: F401
+
+PyTree = Any
+
+
+def _weighted_mean(stacked_w: PyTree, coef: jnp.ndarray) -> PyTree:
+    coef = coef / jnp.maximum(jnp.sum(coef), 1e-12)
+    return jax.tree.map(
+        lambda w: jnp.sum(_bshape(coef, w) * w, axis=0), stacked_w)
+
+
+@jax.jit
+def fedavg(stacked_w: PyTree, part_weights: Optional[jnp.ndarray] = None) -> PyTree:
+    leaves = jax.tree_util.tree_leaves(stacked_w)
+    n = leaves[0].shape[0]
+    if part_weights is None:
+        part_weights = jnp.ones((n,), jnp.float32)
+    return _weighted_mean(stacked_w, part_weights)
+
+
+@jax.jit
+def t_fedavg(stacked_w: PyTree, mask: jnp.ndarray,
+             part_weights: Optional[jnp.ndarray] = None) -> PyTree:
+    """Timely-only FedAvg: renormalized over present participants."""
+    m = mask.astype(jnp.float32)
+    if part_weights is None:
+        part_weights = jnp.ones_like(m)
+    return _weighted_mean(stacked_w, part_weights * m)
+
+
+@jax.jit
+def d_fedavg(stacked_w: PyTree, mask: jnp.ndarray, last_w: PyTree,
+             part_weights: Optional[jnp.ndarray] = None
+             ) -> tuple[PyTree, PyTree]:
+    """Delayed-weights FedAvg: straggler slots filled with last submissions.
+
+    Returns (aggregate, updated last_w store).
+    """
+    m = mask.astype(jnp.float32)
+    if part_weights is None:
+        part_weights = jnp.ones_like(m)
+
+    def fill(w, lw):
+        mb = _bshape(m, w)
+        return mb * w + (1.0 - mb) * lw
+
+    filled = jax.tree.map(fill, stacked_w, last_w)
+    new_last = filled  # present -> current weights; absent -> unchanged
+    return _weighted_mean(filled, part_weights), new_last

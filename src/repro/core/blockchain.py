@@ -1,0 +1,155 @@
+"""Raft-based consortium blockchain (Sec. 2.3) — discrete-event simulation.
+
+The blockchain is a control-plane protocol among edge servers; it has no TPU
+compute analogue (see DESIGN.md §3), so we implement it as a faithful,
+latency-accounted simulation:
+
+  * Leader election — randomized election timeouts, term counting, majority
+    votes (Raft §5.2).  Runs *before* global aggregation, overlapped with the
+    K edge rounds, exactly as the paper requires to hide consensus latency.
+  * Model submission — followers send edge models to the leader.
+  * Block generation — the leader packages all edge models + the new global
+    model into a block (hash-chained), replicates it, and commits on majority
+    acknowledgement.
+
+Every operation returns elapsed simulated time; ``consensus_latency()`` feeds
+constraint C2 of the latency optimization (Sec. 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Optional
+
+import numpy as np
+
+
+def _hash_payload(payload: Any) -> str:
+    def default(o):
+        if isinstance(o, np.ndarray):
+            return hashlib.sha256(o.tobytes()).hexdigest()
+        if hasattr(o, "tolist"):
+            return o.tolist()
+        return repr(o)
+    blob = json.dumps(payload, sort_keys=True, default=default).encode()
+    return hashlib.sha256(blob).hexdigest()
+
+
+@dataclasses.dataclass
+class Block:
+    index: int
+    term: int
+    prev_hash: str
+    payload_hash: str      # hash over {edge models, global model}
+    leader: int
+    timestamp: float       # simulated seconds since genesis
+
+    @property
+    def hash(self) -> str:
+        return _hash_payload(dataclasses.asdict(self))
+
+
+@dataclasses.dataclass
+class RaftParams:
+    """Timing parameters (seconds).  Defaults follow the paper's measured
+    setup: ~0.05 s edge-to-edge link latency (Sec. 6.2.2, citing [8])."""
+    link_latency: float = 0.05          # one-way edge<->edge message
+    election_timeout: tuple[float, float] = (0.15, 0.30)  # Raft's range
+    heartbeat_interval: float = 0.05
+    block_serialize: float = 0.01       # leader-side block packaging
+
+
+class RaftChain:
+    """N edge servers running Raft; one instance per BHFL deployment."""
+
+    def __init__(self, n_nodes: int, params: Optional[RaftParams] = None,
+                 seed: int = 0):
+        if n_nodes < 1:
+            raise ValueError("need at least one edge server")
+        self.n = n_nodes
+        self.params = params or RaftParams()
+        self.rng = np.random.default_rng(seed)
+        self.term = 0
+        self.leader: Optional[int] = None
+        self.clock = 0.0
+        genesis = Block(0, 0, "0" * 64, _hash_payload("genesis"), -1, 0.0)
+        self.blocks: list[Block] = [genesis]
+        self.alive = np.ones(n_nodes, dtype=bool)
+
+    # ------------------------------------------------------------------ raft
+    def elect_leader(self) -> tuple[int, float]:
+        """Randomized-timeout election; returns (leader id, elapsed time).
+
+        The node whose timeout fires first requests votes; it wins if a
+        majority of nodes is alive (consortium setting: no byzantine voters).
+        Re-draws on split timeouts within 1ms, like Raft's re-election.
+        """
+        elapsed = 0.0
+        while True:
+            self.term += 1
+            lo, hi = self.params.election_timeout
+            alive_ids = np.flatnonzero(self.alive)
+            if alive_ids.size == 0:
+                raise RuntimeError("no live edge servers")
+            timeouts = self.rng.uniform(lo, hi, size=alive_ids.size)
+            order = np.argsort(timeouts)
+            first, t_first = alive_ids[order[0]], timeouts[order[0]]
+            split = timeouts.size > 1 and (timeouts[order[1]] - t_first) < 1e-3
+            # candidate timeout + RequestVote round trip to majority
+            elapsed += t_first + 2 * self.params.link_latency
+            if self.alive.sum() >= self.n // 2 + 1 and not split:
+                self.leader = int(first)
+                self.clock += elapsed
+                return self.leader, elapsed
+            # split vote: try again (elapsed keeps accumulating)
+
+    def fail_node(self, i: int) -> None:
+        self.alive[i] = False
+        if self.leader == i:
+            self.leader = None
+
+    def recover_node(self, i: int) -> None:
+        self.alive[i] = True
+
+    # ------------------------------------------------------ block lifecycle
+    def commit_block(self, edge_models_digest: Any, global_model_digest: Any
+                     ) -> tuple[Block, float]:
+        """Leader packages + replicates a block; commits on majority ack.
+
+        Returns (block, elapsed time).  Elapsed = serialize + AppendEntries
+        round trip; with a failed leader an election is run first.
+        """
+        elapsed = 0.0
+        if self.leader is None or not self.alive[self.leader]:
+            _, t = self.elect_leader()
+            elapsed += t
+        payload = {"edges": edge_models_digest, "global": global_model_digest,
+                   "term": self.term}
+        block = Block(
+            index=len(self.blocks),
+            term=self.term,
+            prev_hash=self.blocks[-1].hash,
+            payload_hash=_hash_payload(payload),
+            leader=self.leader,
+            timestamp=self.clock,
+        )
+        elapsed += self.params.block_serialize + 2 * self.params.link_latency
+        if self.alive.sum() < self.n // 2 + 1:
+            raise RuntimeError("cannot commit: no majority alive")
+        self.blocks.append(block)
+        self.clock += elapsed
+        return block, elapsed
+
+    def consensus_latency(self) -> float:
+        """Expected per-round consensus latency L_bc (election amortized out:
+        the paper overlaps election with edge rounds, so steady-state L_bc is
+        block replication only)."""
+        return self.params.block_serialize + 2 * self.params.link_latency
+
+    # ------------------------------------------------------------ integrity
+    def validate(self) -> bool:
+        for prev, blk in zip(self.blocks, self.blocks[1:]):
+            if blk.prev_hash != prev.hash or blk.index != prev.index + 1:
+                return False
+        return True

@@ -1,0 +1,84 @@
+"""Convergence bound Omega (Theorem 2 RHS) used as constraint C1 in Sec. 5.2.
+
+Theorem 2 bounds the mean squared gradient norm of the global loss:
+
+    (1/T) sum_t E||grad F(w_t)||^2
+      <= 2 [F(w0) - F(w*) + sqrt(K) * eta * rho * delta''^2] / (sqrt(T) * D)
+       + (2 + L) * [rho + gamma0 * (S/N) * (Delta_i + delta_i^2) - delta_bar'] / D
+
+    with  rho = E[J_s] / (N * E[J_i]),
+          D   = 2 sqrt(K) * eta * rho + L * eta - 1.
+
+The constants (L, delta''_sq, Delta_i, delta_i_sq, delta_bar_p, F-gap) are not
+observable a priori; ``BoundParams.from_trace`` estimates them from a short
+training trace, which is how the paper's experiments implicitly instantiate
+the bound when solving for K*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BoundParams:
+    L: float = 10.0              # Lipschitz constant of grad F
+    # Theorem 2 requires eta >= 1/(L + 2K rho), i.e. eta on the order of 1/L;
+    # smaller eta makes the bound's denominator negative (theorem vacuous).
+    eta: float = 0.12            # E[eta^{t,k}]
+    f_gap: float = 2.3           # F(w0) - F(w*)
+    delta_pp_sq: float = 0.5     # delta''^2 — edge-gradient variance
+    Delta_i: float = 0.01        # E[weight-difference drift] (Assumption 2.1)
+    delta_i_sq: float = 0.01     # its variance bound
+    delta_bar_p: float = 0.0     # delta_bar' — estimated-weight deviation
+    gamma0: float = 0.9
+    s_frac: float = 0.2          # E[S^t] / N — straggler fraction at edges
+    j_ratio: float = 0.2         # rho = E[J_s] / (N E[J_i])
+    T: int = 50
+
+    @staticmethod
+    def from_trace(losses: Sequence[float], grad_norms: Sequence[float],
+                   weight_deltas: Sequence[float], eta: float, gamma0: float,
+                   s_frac: float, j_ratio: float, T: int) -> "BoundParams":
+        """Estimate the bound constants from an observed training trace.
+
+        L from the grad-norm / weight-delta ratio (secant estimate of the
+        Lipschitz constant); variances from trace dispersion.
+        """
+        losses = np.asarray(losses, dtype=np.float64)
+        g = np.asarray(grad_norms, dtype=np.float64)
+        d = np.asarray(weight_deltas, dtype=np.float64)
+        dg = np.abs(np.diff(g))
+        L = float(np.median(dg / np.maximum(d[: dg.size], 1e-9))) if dg.size else 10.0
+        return BoundParams(
+            L=max(L, 1e-3),
+            eta=eta,
+            f_gap=float(max(losses[0] - losses.min(), 1e-3)),
+            delta_pp_sq=float(np.var(g)) if g.size > 1 else 0.5,
+            Delta_i=float(np.mean(d)) if d.size else 0.01,
+            delta_i_sq=float(np.var(d)) if d.size > 1 else 0.01,
+            delta_bar_p=0.0,
+            gamma0=gamma0, s_frac=s_frac, j_ratio=j_ratio, T=T,
+        )
+
+
+def omega_bound(K: int, p: BoundParams) -> float:
+    """Theorem 2's upper bound Omega as a function of K.
+
+    Valid under the theorem's step-size condition (denominator D > 0); we
+    return +inf outside the valid region so the optimizer treats it as
+    infeasible rather than exploiting a negative denominator.
+    """
+    rho = p.j_ratio
+    denom = 2.0 * math.sqrt(K) * p.eta * rho + p.L * p.eta - 1.0
+    if denom <= 0:
+        return float("inf")
+    term1 = 2.0 * (p.f_gap + math.sqrt(K) * p.eta * rho * p.delta_pp_sq) \
+        / (math.sqrt(p.T) * denom)
+    straggler_pen = rho + p.gamma0 * p.s_frac * (p.Delta_i + p.delta_i_sq) \
+        - p.delta_bar_p
+    term2 = (2.0 + p.L) * straggler_pen / denom
+    return term1 + term2

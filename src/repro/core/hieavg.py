@@ -1,0 +1,263 @@
+"""HieAvg — the paper's hierarchical averaging aggregation (Sec. 3).
+
+All functions are pytree-generic: participant weights are *stacked* pytrees
+whose leaves carry a leading participant dimension ``n`` (clients of one edge
+server, or edge servers at the global layer).  Straggler handling is driven by
+a boolean ``mask`` of shape ``[n]`` (True = submitted in time).
+
+Two aggregation layers (paper eqs. (2)-(5)):
+
+  * edge layer   — unweighted mean over the J_i devices of edge i,
+  * global layer — each edge model weighted by J_i / sum_i J_i.
+
+Straggler estimation (Sec. 3.2.2): a straggler's missing submission is
+estimated from its history,
+
+    w_bar_s = w_s^{last} + E[Delta_s],     Delta = w^{last} - w^{prev},
+
+scaled by the decay factor gamma = gamma0 * lambda**k' where k' >= 1 counts
+consecutive missed rounds.  ``E[Delta]`` is a running mean of observed deltas.
+
+Faithful vs. normalized mode
+----------------------------
+Eq. (4) divides the mixed sum by J_i even though straggler terms are shrunk by
+gamma < 1, which biases the aggregate norm low as gamma decays (a permanent
+straggler's slot decays toward a zero contribution).  We implement that
+faithfully (``normalize=False``, the default — it is what the paper wrote) and
+additionally offer a *beyond-paper* normalized mode that divides by
+``M + sum_s gamma_s`` so the aggregate stays an affine combination
+(``normalize=True``).  EXPERIMENTS.md §Perf ablates the two.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _bshape(v: jnp.ndarray, leaf: jnp.ndarray) -> jnp.ndarray:
+    """Reshape a [n] vector so it broadcasts against a [n, ...] leaf."""
+    return v.reshape(v.shape + (1,) * (leaf.ndim - 1))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class History:
+    """Per-participant submission history used by the estimator.
+
+    Leaves of ``prev_w`` / ``delta_mean`` have leading dim ``n`` matching the
+    stacked participant weights.  ``n_obs`` counts observed deltas (for the
+    running mean); ``miss_count`` counts consecutive missed rounds (the
+    paper's k' / t').
+    """
+
+    prev_w: PyTree
+    delta_mean: PyTree
+    n_obs: jnp.ndarray      # [n] float32
+    miss_count: jnp.ndarray  # [n] float32
+
+
+def init_history(stacked_w: PyTree, dtype=None) -> History:
+    """Cold-boot initialization from the first stacked submission (Alg. 1).
+
+    After this call one more observed round is required before the delta
+    history is meaningful — hence the paper's T_c >= 2 requirement, which
+    ``repro.fl.simulator`` enforces.
+
+    ``dtype`` overrides the history storage dtype — a beyond-paper knob:
+    HieAvg's intrinsic memory cost is two extra model copies per hierarchy
+    layer; ``jnp.float8_e4m3fn`` halves it (EXPERIMENTS.md §Perf, X1).
+    All estimation math stays f32 regardless (update_history casts).
+    """
+    leaves = jax.tree_util.tree_leaves(stacked_w)
+    n = leaves[0].shape[0]
+    cast = (lambda x: jnp.asarray(x, dtype)) if dtype is not None \
+        else jnp.asarray
+    return History(
+        prev_w=jax.tree.map(cast, stacked_w),
+        delta_mean=jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype),
+                                stacked_w),
+        n_obs=jnp.zeros((n,), jnp.float32),
+        miss_count=jnp.zeros((n,), jnp.float32),
+    )
+
+
+def _estimate(history: History, gamma0: float, lam: float):
+    """gamma_s * (w_prev + E[Delta]) and the decay factor per participant.
+
+    miss_count passed in must already include the current missed round, so the
+    first miss uses k' = 1 (paper: k' >= 1).
+    """
+    gamma = gamma0 * lam ** history.miss_count  # [n]
+    est = jax.tree.map(lambda p, d: p + d, history.prev_w, history.delta_mean)
+    return est, gamma
+
+
+def update_history(history: History, stacked_w: PyTree, mask: jnp.ndarray) -> History:
+    """Fold one round of submissions into the history.
+
+    Present participants (mask True): delta = w - prev_w joins the running
+    mean, prev_w <- w, miss_count <- 0.  Stragglers: prev_w is *extrapolated*
+    by E[Delta] (so the next-round estimate keeps advancing, per Sec. 3.2.2's
+    multi-round estimation), delta stats frozen, miss_count += 1.
+    """
+    m = mask.astype(jnp.float32)
+
+    def upd_prev(prev, w, dmean):
+        mb = _bshape(m, prev)
+        out = mb * w.astype(jnp.float32) \
+            + (1.0 - mb) * (prev + dmean).astype(jnp.float32)
+        return out.astype(prev.dtype)   # keep storage dtype stable (bf16 ok)
+
+    def upd_dmean(prev, w, dmean):
+        mb = _bshape(m, prev)
+        nb = _bshape(history.n_obs, prev)
+        delta = w.astype(jnp.float32) - prev.astype(jnp.float32)
+        new_mean = (dmean.astype(jnp.float32) * nb + delta) / (nb + 1.0)
+        return (mb * new_mean
+                + (1.0 - mb) * dmean.astype(jnp.float32)).astype(dmean.dtype)
+
+    new_prev = jax.tree.map(upd_prev, history.prev_w, stacked_w, history.delta_mean)
+    new_dmean = jax.tree.map(upd_dmean, history.prev_w, stacked_w, history.delta_mean)
+    return History(
+        prev_w=new_prev,
+        delta_mean=new_dmean,
+        n_obs=history.n_obs + m,
+        miss_count=(history.miss_count + 1.0) * (1.0 - m),
+    )
+
+
+def _mix(stacked_w: PyTree, mask: jnp.ndarray, history: Optional[History],
+         part_weights: jnp.ndarray, gamma0: float, lam: float,
+         normalize: bool) -> PyTree:
+    """Shared weighted mix for both layers.
+
+    part_weights: [n] relative weight of each participant (1/J at the edge
+    layer; J_i / sum J_i at the global layer).  Returns the aggregated pytree
+    (no leading participant dim).
+    """
+    m = mask.astype(jnp.float32)
+    if history is None:  # cold boot: everyone assumed present (Alg. 1)
+        coef = part_weights
+        est = None
+        gamma = None
+    else:
+        # miss_count as of *this* round: stragglers' counter incremented now.
+        bumped = dataclasses.replace(
+            history, miss_count=(history.miss_count + 1.0) * (1.0 - m) + 0.0)
+        # k' for current-round estimate = previous consecutive misses + 1
+        est, gamma = _estimate(
+            dataclasses.replace(history, miss_count=history.miss_count + 1.0),
+            gamma0, lam)
+        del bumped
+        coef = part_weights * (m + (1.0 - m) * gamma)
+
+    if normalize:
+        coef = coef / jnp.maximum(jnp.sum(coef), 1e-12)
+
+    def agg(w, e=None):
+        cb = _bshape(coef, w)
+        if e is None:
+            return jnp.sum(cb * w, axis=0)
+        mb = _bshape(m, w)
+        return jnp.sum(cb * (mb * w + (1.0 - mb) * e), axis=0)
+
+    if est is None:
+        return jax.tree.map(agg, stacked_w)
+    return jax.tree.map(agg, stacked_w, est)
+
+
+def _mix_and_update(stacked_w: PyTree, mask: jnp.ndarray, history: History,
+                    part_weights: jnp.ndarray, gamma0: float, lam: float,
+                    normalize: bool) -> tuple[PyTree, History]:
+    """Aggregate (eq. 4/5) + history update in ONE pass per leaf.
+
+    The separate _mix / update_history formulation walks every [n, ...]
+    leaf twice with fresh f32 intermediates — at 16B-parameter trees that
+    is several live f32 copies of the model at peak.  Fusing both into one
+    tree.map shares the (prev + Δ̄) estimate and lets XLA schedule leaf by
+    leaf (the XLA analogue of kernels/hieavg_agg, which fuses the same
+    chain into one HBM pass on TPU).
+    """
+    m = mask.astype(jnp.float32)
+    gamma = gamma0 * lam ** (history.miss_count + 1.0)   # k' >= 1
+    coef = part_weights * (m + (1.0 - m) * gamma)
+    if normalize:
+        coef = coef / jnp.maximum(jnp.sum(coef), 1e-12)
+    coef_p = coef * m                    # weight on the real submission
+    coef_e = coef * (1.0 - m)            # weight on the estimate
+    nb1 = history.n_obs + 1.0
+
+    def one(w, prev, dmean):
+        f32 = jnp.float32
+        wf, pf, df = w.astype(f32), prev.astype(f32), dmean.astype(f32)
+        est = pf + df
+        agg = jnp.sum(_bshape(coef_p, wf) * wf + _bshape(coef_e, wf) * est,
+                      axis=0)
+        mb = _bshape(m, wf)
+        new_prev = (mb * wf + (1.0 - mb) * est).astype(prev.dtype)
+        new_mean = (df * _bshape(history.n_obs, wf) + (wf - pf)) \
+            / _bshape(nb1, wf)
+        new_dmean = (mb * new_mean + (1.0 - mb) * df).astype(dmean.dtype)
+        return agg, new_prev, new_dmean
+
+    triples = jax.tree.map(one, stacked_w, history.prev_w,
+                           history.delta_mean)
+    treedef = jax.tree_util.tree_structure(stacked_w)
+    leaves = treedef.flatten_up_to(triples)
+    agg = jax.tree_util.tree_unflatten(treedef, [t[0] for t in leaves])
+    new_hist = History(
+        prev_w=jax.tree_util.tree_unflatten(treedef, [t[1] for t in leaves]),
+        delta_mean=jax.tree_util.tree_unflatten(treedef,
+                                                [t[2] for t in leaves]),
+        n_obs=history.n_obs + m,
+        miss_count=(history.miss_count + 1.0) * (1.0 - m),
+    )
+    return agg, new_hist
+
+
+@partial(jax.jit, static_argnames=("gamma0", "lam", "normalize"))
+def edge_aggregate(stacked_w: PyTree, mask: jnp.ndarray, history: History,
+                   *, gamma0: float = 0.9, lam: float = 0.9,
+                   normalize: bool = False) -> tuple[PyTree, History]:
+    """Eq. (4): edge aggregation with straggler estimation.
+
+    Returns (edge model w_i^{t,k}, updated history).
+    """
+    n = mask.shape[0]
+    pw = jnp.full((n,), 1.0 / n, jnp.float32)
+    return _mix_and_update(stacked_w, mask, history, pw, gamma0, lam,
+                           normalize)
+
+
+@partial(jax.jit, static_argnames=("gamma0", "lam", "normalize"))
+def global_aggregate(stacked_w: PyTree, mask: jnp.ndarray, history: History,
+                     j_per_edge: jnp.ndarray, *, gamma0: float = 0.9,
+                     lam: float = 0.9, normalize: bool = False
+                     ) -> tuple[PyTree, History]:
+    """Eq. (5): global aggregation on the edge leader, J_i-weighted."""
+    pw = j_per_edge.astype(jnp.float32) / jnp.sum(j_per_edge)
+    return _mix_and_update(stacked_w, mask, history, pw, gamma0, lam,
+                           normalize)
+
+
+@jax.jit
+def edge_aggregate_cold(stacked_w: PyTree) -> PyTree:
+    """Eq. (2) during cold boot — plain mean over devices (no stragglers)."""
+    return jax.tree.map(lambda w: jnp.mean(w, axis=0), stacked_w)
+
+
+@jax.jit
+def global_aggregate_cold(stacked_w: PyTree, j_per_edge: jnp.ndarray) -> PyTree:
+    """Eq. (3) during cold boot — J_i-weighted mean over edge models."""
+    pw = j_per_edge.astype(jnp.float32) / jnp.sum(j_per_edge)
+
+    def agg(w):
+        return jnp.sum(_bshape(pw, w) * w, axis=0)
+
+    return jax.tree.map(agg, stacked_w)

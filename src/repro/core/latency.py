@@ -1,0 +1,97 @@
+"""Latency model and K* optimization (Sec. 5).
+
+Communication uses Shannon capacity r = B log2(1 + u*pi/eps^2); transmission
+latency is D/r.  Compute latency is C/f (CPU cycles / clock).  Total latency
+(Sec. 5.1.4, simplified form):
+
+    L ~= T*N*J*K*(2*E[LM] + E[LP]) + 2*T*N*E[LM']
+
+The optimization (Sec. 5.2) picks the number of edge rounds K minimizing L
+subject to
+    C1: Omega(K) <= Omega_bar      (convergence bound, Thm 2 RHS)
+    C2: L_bc     <= L_g(K)         (consensus hidden inside the edge window)
+    C3: K in N+.
+
+This is an integer program over a single scalar; we solve it exactly by
+enumeration (the paper suggests CVXPY — unavailable offline, and enumeration
+over K <= K_max is already polynomial and exact).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+
+def shannon_rate(bandwidth_hz: float, tx_power: float, channel_gain: float,
+                 noise: float) -> float:
+    """r = B log2(1 + u*pi / eps^2)  [bits/s]."""
+    return bandwidth_hz * math.log2(1.0 + tx_power * channel_gain / noise ** 2)
+
+
+def comm_latency(model_bytes: float, rate_bps: float) -> float:
+    """LM = D / r (D in bits)."""
+    return model_bytes * 8.0 / rate_bps
+
+
+def compute_latency(cpu_cycles: float, clock_hz: float) -> float:
+    """LP = C / f."""
+    return cpu_cycles / clock_hz
+
+
+@dataclasses.dataclass
+class LatencyParams:
+    """Expectation-level parameters of Sec. 5.1 (defaults = the paper's
+    measured numbers: 1.67 s local training, 0.51 s device<->edge transfer,
+    0.05 s edge<->edge link, Sec. 6.2.2)."""
+    T: int = 50            # global rounds
+    N: int = 5             # edge servers
+    J: int = 5             # devices per edge
+    lm_device: float = 0.51   # E[LM]   device<->edge one-way
+    lp_device: float = 1.67   # E[LP]   local training per edge round
+    lm_edge: float = 0.05     # E[LM']  edge<->leader one-way
+
+
+def total_latency(K: int, p: LatencyParams) -> float:
+    """L(K) — Sec. 5.1.4 simplified expectation form."""
+    local = p.T * p.N * p.J * K * (2.0 * p.lm_device + p.lp_device)
+    edge = 2.0 * p.T * p.N * p.lm_edge
+    return local + edge
+
+
+def edge_window(K: int, p: LatencyParams) -> float:
+    """L_g = K * max(LM + LP): time the blockchain has to finish consensus."""
+    return K * (p.lm_device + p.lp_device)
+
+
+@dataclasses.dataclass
+class KOptResult:
+    k_star: int
+    latency: float
+    feasible: np.ndarray     # [K_max] bool
+    latencies: np.ndarray    # [K_max]
+    omegas: np.ndarray       # [K_max]
+
+
+def optimize_k(p: LatencyParams, omega_fn: Callable[[int], float],
+               omega_bar: float, consensus_latency: float,
+               k_max: int = 64) -> Optional[KOptResult]:
+    """argmin_K L(K)  s.t.  Omega(K) <= Omega_bar, L_bc <= L_g(K), K >= 1.
+
+    Returns None when infeasible for every K <= k_max.
+    L(K) is increasing in K while Omega(K) decreases (Corollary 1), so K* is
+    the smallest feasible K — but we enumerate anyway for robustness to
+    non-monotone omega_fn.
+    """
+    ks = np.arange(1, k_max + 1)
+    lat = np.array([total_latency(int(k), p) for k in ks])
+    om = np.array([omega_fn(int(k)) for k in ks])
+    win = np.array([edge_window(int(k), p) for k in ks])
+    feas = (om <= omega_bar) & (consensus_latency <= win)
+    if not feas.any():
+        return None
+    idx = int(np.argmin(np.where(feas, lat, np.inf)))
+    return KOptResult(k_star=int(ks[idx]), latency=float(lat[idx]),
+                      feasible=feas, latencies=lat, omegas=om)

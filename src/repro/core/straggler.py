@@ -1,0 +1,62 @@
+"""Straggler schedules (Sec. 2.4, 6.1.2).
+
+A schedule is a boolean array ``[rounds, n]`` with True = submitted in time.
+Permanent stragglers stop submitting after ``stop_round`` (paper: round 40);
+temporary stragglers miss individual rounds but return the next round.
+
+Schedules are sampled host-side with numpy (they model external network
+conditions, not traced computation) and fed to the jitted steps as arrays.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def no_stragglers(rounds: int, n: int) -> np.ndarray:
+    return np.ones((rounds, n), dtype=bool)
+
+
+def permanent(rounds: int, n: int, n_stragglers: int, stop_round: int = 40,
+              seed: int = 0) -> np.ndarray:
+    """``n_stragglers`` participants never submit again after ``stop_round``."""
+    rng = np.random.default_rng(seed)
+    mask = np.ones((rounds, n), dtype=bool)
+    idx = rng.choice(n, size=min(n_stragglers, n), replace=False)
+    mask[stop_round:, idx] = False
+    return mask
+
+
+def temporary(rounds: int, n: int, n_stragglers: int, miss_prob: float = 0.5,
+              seed: int = 0, cold_boot_rounds: int = 2) -> np.ndarray:
+    """``n_stragglers`` participants each miss random single rounds.
+
+    A missed round is always followed by a submitted round (the paper's
+    temporary stragglers "continue to submit in the next round after the
+    missing round").  Cold-boot rounds are never missed (Alg. 1 assumes all
+    devices submit during T_c).
+    """
+    rng = np.random.default_rng(seed)
+    mask = np.ones((rounds, n), dtype=bool)
+    idx = rng.choice(n, size=min(n_stragglers, n), replace=False)
+    for i in idx:
+        r = cold_boot_rounds
+        while r < rounds:
+            if rng.random() < miss_prob:
+                mask[r, i] = False
+                r += 2  # forced return next round
+            else:
+                r += 1
+    return mask
+
+
+def from_fraction(rounds: int, n: int, frac: float, kind: str = "temporary",
+                  **kw) -> np.ndarray:
+    """Paper basic setting: 20% stragglers per layer -> n_stragglers = frac*n."""
+    k = int(round(frac * n))
+    if kind == "permanent":
+        return permanent(rounds, n, k, **kw)
+    if kind == "temporary":
+        return temporary(rounds, n, k, **kw)
+    if kind == "none":
+        return no_stragglers(rounds, n)
+    raise ValueError(f"unknown straggler kind: {kind}")

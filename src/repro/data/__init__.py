@@ -1,0 +1,4 @@
+from .synthetic import class_images, lm_tokens
+from .partition import by_class, dirichlet
+
+__all__ = ["class_images", "lm_tokens", "by_class", "dirichlet"]

@@ -1,0 +1,68 @@
+"""Non-IID partitioners (Sec. 6.1.1, 6.2.1).
+
+``by_class(max_classes)`` reproduces the paper's setting: each local device
+owns at most ``max_classes`` image classes ("non_IID_1" = 1 class/device).
+``dirichlet`` is the standard LDA partitioner for ablations.  Both return a
+list-of-index-arrays per (edge, device) so edges can have inconsistent J_i
+(Fig. 4b).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def by_class(labels: np.ndarray, n_edges: int, j_per_edge: list[int],
+             max_classes: int = 1, seed: int = 0) -> list[list[np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    n_classes = int(labels.max()) + 1
+    by_c = [np.flatnonzero(labels == c) for c in range(n_classes)]
+    for idx in by_c:
+        rng.shuffle(idx)
+    cursor = [0] * n_classes
+    total_devices = sum(j_per_edge)
+    # round-robin class assignment so all classes are covered across devices
+    device_classes = []
+    order = rng.permutation(n_classes)
+    for d in range(total_devices):
+        cls = [int(order[(d * max_classes + m) % n_classes])
+               for m in range(max_classes)]
+        device_classes.append(cls)
+    per_class_share = {c: max(1, len(by_c[c]) // max(
+        1, sum(c in dc for dc in device_classes))) for c in range(n_classes)}
+    out, d = [], 0
+    for e in range(n_edges):
+        edge_parts = []
+        for _ in range(j_per_edge[e]):
+            chunks = []
+            for c in device_classes[d]:
+                share = per_class_share[c]
+                lo = cursor[c]
+                cursor[c] = min(lo + share, len(by_c[c]))
+                chunks.append(by_c[c][lo:cursor[c]])
+            edge_parts.append(np.concatenate(chunks) if chunks else
+                              np.empty((0,), np.int64))
+            d += 1
+        out.append(edge_parts)
+    return out
+
+
+def dirichlet(labels: np.ndarray, n_edges: int, j_per_edge: list[int],
+              alpha: float = 0.5, seed: int = 0) -> list[list[np.ndarray]]:
+    rng = np.random.default_rng(seed)
+    n_classes = int(labels.max()) + 1
+    total = sum(j_per_edge)
+    props = rng.dirichlet(np.full(total, alpha), size=n_classes)  # [C, D]
+    device_idx: list[list[np.ndarray]] = [[] for _ in range(total)]
+    for c in range(n_classes):
+        idx = np.flatnonzero(labels == c)
+        rng.shuffle(idx)
+        cuts = (np.cumsum(props[c])[:-1] * len(idx)).astype(int)
+        for d, part in enumerate(np.split(idx, cuts)):
+            device_idx[d].append(part)
+    flat = [np.concatenate(p) if p else np.empty((0,), np.int64)
+            for p in device_idx]
+    out, d = [], 0
+    for e in range(n_edges):
+        out.append(flat[d:d + j_per_edge[e]])
+        d += j_per_edge[e]
+    return out

@@ -1,0 +1,3 @@
+from .simulator import BHFLSimulator, RunResult, run_comparison
+
+__all__ = ["BHFLSimulator", "RunResult", "run_comparison"]

@@ -1,0 +1,323 @@
+"""BHFL simulator — runs the paper's experiments (Sec. 6) end to end.
+
+Simulates N edge servers × J_i local devices training the paper's CNN on a
+non-IID class-partitioned dataset, with the full BHFL workflow:
+
+  1. Updates Submission — every device trains locally (vmapped SGD epoch),
+  2. Edge Aggregation   — HieAvg (or a benchmark aggregator) per edge,
+     repeated K times per global round,
+  3. Blockchain Consensus — Raft leader election overlapped with the K edge
+     rounds (latency-accounted, Sec. 5.1.3),
+  4. Global Aggregation — the leader aggregates edge models, commits a block.
+
+Straggler schedules (permanent / temporary, per layer) drive boolean masks;
+the aggregator sees only the masks, exactly like a real deadline-based
+system.  Aggregators: ``hieavg`` (the paper), ``t_fedavg`` (drop),
+``d_fedavg`` (reuse last), ``fedavg`` (oracle; meaningful with no-straggler
+schedules).
+
+All devices are simulated in one jitted vmap over the stacked device
+dimension, so a full Fig. 2 run takes seconds on CPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.bhfl_cnn import BHFLSetting
+from repro.core import (RaftChain, baselines, hieavg, latency as lat,
+                        straggler as strag)
+from repro.data import by_class, class_images
+from repro.models import cnn_accuracy, cnn_loss, cnn_specs, init_from_specs
+from repro.optim import paper_lr
+
+PyTree = Any
+
+
+# --------------------------------------------------------------- local step
+@partial(jax.jit, static_argnames=())
+def _train_epoch(params: PyTree, images: jnp.ndarray, labels: jnp.ndarray,
+                 lr: jnp.ndarray) -> tuple[PyTree, jnp.ndarray]:
+    """One local epoch for all devices.  params: stacked [D, ...];
+    images: [D, steps, B, H, W, 1]; labels: [D, steps, B]. Returns
+    (new stacked params, mean loss per device [D]).
+
+    scan(vmap(step)) rather than vmap(scan): one fused all-device matmul per
+    step instead of D separate small ones.
+    """
+
+    def step(ps, xs):
+        im, lb = xs                                     # [D, B, ...]
+        loss, g = jax.vmap(jax.value_and_grad(cnn_loss))(ps, im, lb)
+        ps = jax.tree.map(lambda w, gw: w - lr * gw, ps, g)
+        return ps, loss
+
+    images = jnp.swapaxes(images, 0, 1)                 # [steps, D, ...]
+    labels = jnp.swapaxes(labels, 0, 1)
+    params, losses = jax.lax.scan(step, params, (images, labels))
+    return params, jnp.mean(losses, axis=0)
+
+
+def _stack(trees: list[PyTree]) -> PyTree:
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _index(tree: PyTree, i) -> PyTree:
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def _bcast_like(tree: PyTree, n: int) -> PyTree:
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+
+# ----------------------------------------------------------------- results
+@dataclasses.dataclass
+class RunResult:
+    accuracy: np.ndarray          # [T] test accuracy after each global round
+    loss: np.ndarray              # [T] mean local training loss
+    grad_norm: np.ndarray         # [T] proxy: global-model round-to-round delta
+    wall_time: float
+    sim_latency: float            # paper's latency model total (Sec. 5.1.4)
+    blocks: int                   # committed blockchain blocks
+    chain_valid: bool
+
+
+# --------------------------------------------------------------- simulator
+class BHFLSimulator:
+    """One BHFL deployment over the synthetic MNIST surrogate."""
+
+    def __init__(self, setting: BHFLSetting = BHFLSetting(),
+                 aggregator: str = "hieavg",
+                 device_stragglers: str = "temporary",
+                 edge_stragglers: str = "temporary",
+                 j_per_edge: Optional[list[int]] = None,
+                 n_train: int = 4000, n_test: int = 1000,
+                 steps_per_epoch: Optional[int] = None,
+                 normalize: bool = False,
+                 fail_leader_at: Optional[int] = None,
+                 seed: Optional[int] = None):
+        """``fail_leader_at``: global round at which the current Raft
+        leader crashes — the paper's single-point-of-failure scenario.
+        The consortium re-elects and training continues (the failed edge
+        also becomes a permanent straggler at the global layer)."""
+        self.s = setting
+        self.aggregator = aggregator
+        self.normalize = normalize
+        self.fail_leader_at = fail_leader_at
+        self.seed = setting.seed if seed is None else seed
+        self.N = setting.n_edges
+        self.j_per_edge = j_per_edge or [setting.j_per_edge] * self.N
+        self.D = sum(self.j_per_edge)  # total devices
+        # paper semantics: one local iteration = one epoch over the
+        # device's own shard — so per-round steps scale inversely with the
+        # device count when the total data pool is fixed (Sec. 6.1.5)
+        self.steps = steps_per_epoch if steps_per_epoch is not None \
+            else max(1, n_train // (self.D * setting.batch_size))
+        self.rng = np.random.default_rng(self.seed)
+
+        # ---- data: synthetic class-clustered images, non-IID partition
+        imgs, labels = class_images(n_train + n_test, seed=self.seed,
+                                    hw=setting.image_hw,
+                                    n_classes=setting.n_classes)
+        self.test_x = jnp.asarray(imgs[n_train:])
+        self.test_y = jnp.asarray(labels[n_train:])
+        parts = by_class(labels[:n_train], self.N, self.j_per_edge,
+                         max_classes=setting.classes_per_device,
+                         seed=self.seed)
+        self.device_idx = [idx for edge in parts for idx in edge]
+        self.train_x, self.train_y = imgs[:n_train], labels[:n_train]
+
+        # ---- straggler schedules (submission masks per round)
+        rounds = setting.t_global_rounds * setting.k_edge_rounds + 1
+        n_dev_strag = int(round(setting.straggler_frac * setting.j_per_edge))
+        dev_masks = []
+        for e in range(self.N):
+            kw = dict(stop_round=setting.permanent_stop_round
+                      * setting.k_edge_rounds) \
+                if device_stragglers == "permanent" else {}
+            dev_masks.append(strag.from_fraction(
+                rounds, self.j_per_edge[e],
+                n_dev_strag / max(setting.j_per_edge, 1),
+                kind=device_stragglers, seed=self.seed + 17 * e, **kw))
+        self.dev_masks = dev_masks                      # list of [rounds, J_e]
+        kw = dict(stop_round=setting.permanent_stop_round) \
+            if edge_stragglers == "permanent" else {}
+        self.edge_masks = strag.from_fraction(
+            setting.t_global_rounds + 1, self.N, setting.straggler_frac,
+            kind=edge_stragglers, seed=self.seed + 991, **kw)  # [T+1, N]
+
+        # ---- models
+        self.specs = cnn_specs(setting.image_hw, 1, setting.n_classes,
+                               c1=setting.cnn_c1, c2=setting.cnn_c2)
+        self.chain = RaftChain(self.N, seed=self.seed)
+
+    # ------------------------------------------------------------- batching
+    def _epoch_batches(self, rng) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Sample [D, steps, B] batches from each device's own shard."""
+        bs = self.s.batch_size
+        xs = np.zeros((self.D, self.steps, bs, self.s.image_hw,
+                       self.s.image_hw, 1), np.float32)
+        ys = np.zeros((self.D, self.steps, bs), np.int32)
+        for d, idx in enumerate(self.device_idx):
+            if len(idx) == 0:
+                continue
+            take = rng.choice(idx, size=(self.steps, bs), replace=True)
+            xs[d] = self.train_x[take]
+            ys[d] = self.train_y[take]
+        return jnp.asarray(xs), jnp.asarray(ys)
+
+    # ----------------------------------------------------------------- run
+    def run(self, progress: bool = False) -> RunResult:
+        s = self.s
+        t0 = time.time()
+        key = jax.random.key(self.seed)
+        global_w = init_from_specs(self.specs, key)
+        device_w = _bcast_like(global_w, self.D)        # stacked [D, ...]
+
+        # per-edge device histories + the global edge-model history
+        edge_slices = np.cumsum([0] + self.j_per_edge)
+        dev_hist = None      # stacked [N? ragged] -> list per edge
+        glob_hist = None
+        dev_last = None      # d_fedavg last-submission stores
+        glob_last = None
+
+        accs, losses, deltas = [], [], []
+        prev_global = global_w
+        round_ctr = 0        # edge-round counter (t*K + k) for masks/lr
+
+        failed_edge: Optional[int] = None
+        for t in range(1, s.t_global_rounds + 1):
+            # ---- Raft: overlap leader election with the K edge rounds
+            _, elect_t = self.chain.elect_leader()
+            if self.fail_leader_at is not None and t == self.fail_leader_at:
+                # single-point-of-failure drill: crash the elected leader;
+                # Raft re-elects among the surviving edges (commit_block
+                # below triggers the election) and BHFL keeps training
+                failed_edge = self.chain.leader
+                self.chain.fail_node(failed_edge)
+            if failed_edge is not None:
+                self.edge_masks[t - 1:, failed_edge] = False
+            edge_models = None
+            for k in range(1, s.k_edge_rounds + 1):
+                lr = paper_lr(jnp.asarray(round_ctr), s.lr0, s.lr_decay)
+                bx, by = self._epoch_batches(self.rng)
+                device_w, dev_loss = _train_epoch(device_w, bx, by, lr)
+
+                # per-edge aggregation with this edge round's masks
+                new_edge_models, new_hists, new_lasts = [], [], []
+                for e in range(self.N):
+                    sl = slice(edge_slices[e], edge_slices[e + 1])
+                    ws = _index(device_w, sl)
+                    mask = jnp.asarray(self.dev_masks[e][round_ctr])
+                    agg, hist_e, last_e = self._edge_agg(
+                        ws, mask, t,
+                        None if dev_hist is None else dev_hist[e],
+                        None if dev_last is None else dev_last[e])
+                    new_edge_models.append(agg)
+                    new_hists.append(hist_e)
+                    new_lasts.append(last_e)
+                dev_hist, dev_last = new_hists, new_lasts
+                edge_models = _stack(new_edge_models)   # [N, ...]
+                # devices sync to their edge model for the next epoch
+                device_w = _stack([
+                    _index(edge_models, e)
+                    for e in range(self.N) for _ in range(self.j_per_edge[e])])
+                round_ctr += 1
+
+            # ---- global aggregation on the leader + block commit
+            emask = jnp.asarray(self.edge_masks[t - 1])
+            j_arr = jnp.asarray(self.j_per_edge, jnp.float32)
+            global_w, glob_hist, glob_last = self._global_agg(
+                edge_models, emask, t, glob_hist, glob_last, j_arr)
+            device_w = _bcast_like(global_w, self.D)
+            self.chain.commit_block(f"edges@t={t}", f"global@t={t}")
+
+            # ---- metrics
+            acc = float(cnn_accuracy(global_w, self.test_x, self.test_y))
+            accs.append(acc)
+            losses.append(float(jnp.mean(dev_loss)))
+            dn = float(sum(float(jnp.sum(jnp.square(a - b)))
+                           for a, b in zip(jax.tree.leaves(global_w),
+                                           jax.tree.leaves(prev_global))) ** 0.5)
+            deltas.append(dn)
+            prev_global = global_w
+            if progress and (t % 10 == 0 or t == 1):
+                print(f"  t={t:3d} acc={acc:.4f} loss={losses[-1]:.4f}")
+
+        # paper's latency model (Sec. 5.1.4) for this deployment
+        lp = lat.LatencyParams(T=s.t_global_rounds, N=self.N,
+                               J=int(np.mean(self.j_per_edge)))
+        sim_latency = lat.total_latency(s.k_edge_rounds, lp)
+
+        return RunResult(
+            accuracy=np.asarray(accs), loss=np.asarray(losses),
+            grad_norm=np.asarray(deltas), wall_time=time.time() - t0,
+            sim_latency=sim_latency, blocks=len(self.chain.blocks) - 1,
+            chain_valid=self.chain.validate())
+
+    # ------------------------------------------------------- agg dispatch
+    def _edge_agg(self, ws, mask, t, hist, last):
+        return self._agg(ws, mask, t, hist, last, part_weights=None)
+
+    def _global_agg(self, ws, mask, t, hist, last, j_arr):
+        return self._agg(ws, mask, t, hist, last, part_weights=j_arr)
+
+    def _agg(self, ws, mask, t, hist, last, part_weights):
+        """Returns (aggregate, new history, new last-store)."""
+        s = self.s
+        n = int(mask.shape[0])
+        if self.aggregator == "hieavg":
+            if hist is None:                       # first-ever submission
+                hist = hieavg.init_history(ws)
+            if t <= s.t_cold_boot:                 # Alg. 1: cold boot
+                if part_weights is None:
+                    agg = hieavg.edge_aggregate_cold(ws)
+                else:
+                    agg = hieavg.global_aggregate_cold(ws, part_weights)
+                hist = hieavg.update_history(hist, ws, mask)
+                return agg, hist, last
+            if part_weights is None:
+                agg, hist = hieavg.edge_aggregate(
+                    ws, mask, hist, gamma0=s.gamma0, lam=s.lam,
+                    normalize=self.normalize)
+            else:
+                agg, hist = hieavg.global_aggregate(
+                    ws, mask, hist, part_weights, gamma0=s.gamma0,
+                    lam=s.lam, normalize=self.normalize)
+            return agg, hist, last
+        if self.aggregator == "t_fedavg":
+            return baselines.t_fedavg(ws, mask, part_weights), hist, last
+        if self.aggregator == "d_fedavg":
+            if last is None:
+                last = jax.tree.map(jnp.zeros_like, ws)
+                # first round: treat everyone as present for the store
+                agg, last = baselines.d_fedavg(
+                    ws, jnp.ones_like(mask), last, part_weights)
+                return agg, hist, last
+            agg, last = baselines.d_fedavg(ws, mask, last, part_weights)
+            return agg, hist, last
+        if self.aggregator == "fedavg":
+            return baselines.fedavg(ws, part_weights), hist, last
+        raise ValueError(f"unknown aggregator {self.aggregator!r}")
+
+
+# --------------------------------------------------------------- shortcuts
+def run_comparison(setting: BHFLSetting = BHFLSetting(),
+                   kinds: tuple[str, ...] = ("hieavg", "t_fedavg", "d_fedavg"),
+                   straggler_kind: str = "temporary",
+                   include_oracle: bool = True, **kw) -> dict[str, RunResult]:
+    """Fig. 2-style comparison: same data/seed, different aggregators."""
+    out = {}
+    if include_oracle:
+        out["wo_stragglers"] = BHFLSimulator(
+            setting, "fedavg", "none", "none", **kw).run()
+    for kind in kinds:
+        out[kind] = BHFLSimulator(
+            setting, kind, straggler_kind, straggler_kind, **kw).run()
+    return out

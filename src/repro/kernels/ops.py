@@ -1,0 +1,100 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``fused_edge_aggregate`` mirrors ``repro.core.hieavg.edge_aggregate``'s
+semantics on a stacked pytree, dispatching each leaf (flattened to [n, L])
+through the fused kernel — one HBM pass per leaf instead of XLA's ~7.
+
+``flash_attention`` is the multi-head GQA front-end of the single-head
+kernel: batch, kv-head and group dims are vmapped (Pallas prepends them as
+grid dimensions).
+
+``interpret=True`` everywhere in this container (CPU validation of a TPU
+kernel); the launch layer flips it off on real hardware.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hieavg import History
+from .flash_attention import flash_attention_1h
+from .hieavg_agg import hieavg_agg
+
+PyTree = Any
+
+
+# ----------------------------------------------------------------- hieavg
+@functools.partial(jax.jit, static_argnames=("gamma0", "lam", "normalize",
+                                             "interpret"))
+def fused_edge_aggregate(stacked_w: PyTree, mask: jnp.ndarray,
+                         history: History, *, gamma0: float = 0.9,
+                         lam: float = 0.9, normalize: bool = False,
+                         interpret: bool = True) -> tuple[PyTree, History]:
+    """Kernel-fused equivalent of ``hieavg.edge_aggregate`` (eq. 4).
+
+    Returns (edge model, updated History) — allclose to the core path.
+    """
+    n = mask.shape[0]
+    m = mask.astype(jnp.float32)
+    part_weights = jnp.full((n,), 1.0 / n, jnp.float32)
+    gamma = gamma0 * lam ** (history.miss_count + 1.0)
+    coef = part_weights * (m + (1.0 - m) * gamma)
+    if normalize:
+        coef = coef / jnp.maximum(jnp.sum(coef), 1e-12)
+    coef_present = coef * m
+    coef_est = coef * (1.0 - m)
+
+    leaves_w, treedef = jax.tree_util.tree_flatten(stacked_w)
+    leaves_p = treedef.flatten_up_to(history.prev_w)
+    leaves_d = treedef.flatten_up_to(history.delta_mean)
+
+    aggs, nprevs, ndmeans = [], [], []
+    for w, p, d in zip(leaves_w, leaves_p, leaves_d):
+        flat = (n, -1)
+        a, np_, nd = hieavg_agg(w.reshape(flat), p.reshape(flat),
+                                d.reshape(flat), mask, coef_present,
+                                coef_est, history.n_obs,
+                                interpret=interpret)
+        aggs.append(a.reshape(w.shape[1:]))
+        nprevs.append(np_.reshape(p.shape))
+        ndmeans.append(nd.reshape(d.shape))
+
+    new_hist = History(
+        prev_w=jax.tree_util.tree_unflatten(treedef, nprevs),
+        delta_mean=jax.tree_util.tree_unflatten(treedef, ndmeans),
+        n_obs=history.n_obs + m,
+        miss_count=(history.miss_count + 1.0) * (1.0 - m),
+    )
+    return jax.tree_util.tree_unflatten(treedef, aggs), new_hist
+
+
+# ------------------------------------------------------------------ flash
+@functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
+                                             "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, interpret: bool = True
+                    ) -> jnp.ndarray:
+    """GQA flash attention. q [B,Sq,H,Dh]; k/v [B,Skv,Hkv,Dh] -> like q.
+
+    Matches ``repro.models.attention._sdpa`` semantics (scale 1/sqrt(Dh)).
+    """
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+
+    fn = functools.partial(flash_attention_1h, causal=causal, window=window,
+                           q_offset=q_offset, interpret=interpret)
+    # [B, Hkv, G] prepended as grid dims by vmap (outermost applied last;
+    # each vmap strips the leading mapped axis of the operands it maps)
+    fn = jax.vmap(fn, in_axes=(0, None, None))        # G (q only)
+    fn = jax.vmap(fn, in_axes=(0, 0, 0))              # Hkv
+    fn = jax.vmap(fn, in_axes=(0, 0, 0))              # B
+    qb = jnp.moveaxis(qg, 1, -2)                      # [B, Hkv, G, Sq, Dh]
+    kb = jnp.moveaxis(k, 1, -2)                       # [B, Hkv, Skv, Dh]
+    out = fn(qb, kb, jnp.moveaxis(v, 1, -2))          # [B, Hkv, G, Sq, Dh]
+    return jnp.moveaxis(out, -2, 1).reshape(b, sq, h, dh)

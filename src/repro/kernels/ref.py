@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are the *semantics* contracts: kernels must match them on every
+shape/dtype the tests sweep.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ------------------------------------------------------------- hieavg_agg
+def hieavg_agg_ref(w: jnp.ndarray, prev: jnp.ndarray, dmean: jnp.ndarray,
+                   mask: jnp.ndarray, coef_present: jnp.ndarray,
+                   coef_est: jnp.ndarray, n_obs: jnp.ndarray
+                   ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fused HieAvg mix + history update on one flat leaf.
+
+    w/prev/dmean: [n, L]; mask/coefs/n_obs: [n].
+      agg       = sum_n coef_present*w + coef_est*(prev + dmean)
+      new_prev  = m*w + (1-m)*(prev + dmean)
+      new_dmean = m*((dmean*n_obs + (w - prev)) / (n_obs+1)) + (1-m)*dmean
+    Returns (agg [L], new_prev [n, L], new_dmean [n, L]); all math f32,
+    outputs cast back to input dtypes.
+    """
+    f32 = jnp.float32
+    wf, pf, df = w.astype(f32), prev.astype(f32), dmean.astype(f32)
+    m = mask.astype(f32)[:, None]
+    cp = coef_present.astype(f32)[:, None]
+    ce = coef_est.astype(f32)[:, None]
+    nb = n_obs.astype(f32)[:, None]
+    est = pf + df
+    agg = jnp.sum(cp * wf + ce * est, axis=0)
+    new_prev = m * wf + (1.0 - m) * est
+    new_dmean = m * ((df * nb + (wf - pf)) / (nb + 1.0)) + (1.0 - m) * df
+    return (agg.astype(w.dtype), new_prev.astype(prev.dtype),
+            new_dmean.astype(dmean.dtype))
+
+
+# --------------------------------------------------------- flash attention
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        q_offset: int = 0) -> jnp.ndarray:
+    """Single-head attention oracle. q: [Sq, D]; k/v: [Skv, D] -> [Sq, D].
+
+    Scale 1/sqrt(D); causal/window masks computed from absolute positions
+    (q row i has absolute position q_offset + i).
+    """
+    sq, d = q.shape
+    skv = k.shape[0]
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T
+              ) / jnp.sqrt(jnp.float32(d))
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    logits = jnp.where(ok, logits, -2.0 ** 30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return (probs @ v.astype(jnp.float32)).astype(v.dtype)

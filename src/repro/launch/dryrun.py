@@ -1,0 +1,275 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) pair.
+
+Proves the distribution config is coherent without TPU hardware: 512
+placeholder host devices stand in for 2 pods × 256 chips.  For each pair we
+record memory_analysis (fits-or-not), cost_analysis (FLOPs/bytes), and the
+collective-op byte census parsed from the compiled HLO — the inputs to the
+roofline analysis (EXPERIMENTS.md §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --out dryrun_results.json
+"""
+# The first two lines MUST run before any other import so jax sees 512
+# devices when it locks the platform on first init.
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config           # noqa: E402
+from repro.models import INPUT_SHAPES                    # noqa: E402
+from repro.launch.mesh import make_production_mesh       # noqa: E402
+from repro.launch.inputs import input_specs, output_shardings  # noqa: E402
+from repro.launch.steps import (make_hfl_train_step,     # noqa: E402
+                                make_prefill_step, make_serve_step)
+
+_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+          "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+          "f64": 8}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _tensor_bytes(sig: str) -> int:
+    """Sum byte sizes of every dtype[shape] group in an HLO type signature."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(sig):
+        if dtype not in _BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dtype]
+    return total
+
+
+def _split_computations(hlo_text: str) -> dict[str, str]:
+    """{computation name: body text} from an HLO module dump."""
+    comps: dict[str, str] = {}
+    cur, buf = None, []
+    for line in hlo_text.splitlines():
+        m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{", line)
+        if m and not line.startswith(" "):
+            cur = m.group(1)
+            buf = []
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                comps[cur] = "\n".join(buf)
+                cur = None
+            else:
+                buf.append(line)
+    return comps
+
+
+def _computation_multipliers(comps: dict[str, str]) -> dict[str, float]:
+    """Execution-count multiplier per computation.
+
+    XLA dumps each while (scan) body ONCE; its ops execute trip-count
+    times.  We extract trip counts from the while condition's comparison
+    constant and propagate multipliers along the call graph — so per-layer
+    collectives inside the layers scan are weighted by n_layers, nested
+    scans (q-chunk loops, chunked recurrences) multiply out.
+    """
+    entry = None
+    for name in comps:
+        if name.startswith("main") or entry is None:
+            if name.startswith("main"):
+                entry = name
+    if entry is None:
+        entry = next(iter(comps))
+
+    def trip_count(cond_name: str) -> float:
+        text = comps.get(cond_name, "")
+        consts = [int(x) for x in
+                  re.findall(r"constant\((\d+)\)", text)]
+        return float(max(consts)) if consts else 1.0
+
+    # call edges: (caller, callee, weight)
+    edges: list[tuple[str, str, float]] = []
+    for name, text in comps.items():
+        for m in re.finditer(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)",
+                             text):
+            cond, body = m.group(1), m.group(2)
+            edges.append((name, body, trip_count(cond)))
+        for m in re.finditer(r"(?:calls|to_apply)=%?([\w.\-]+)", text):
+            edges.append((name, m.group(1), 1.0))
+
+    mult = {name: 0.0 for name in comps}
+    mult[entry] = 1.0
+    # propagate (graph is a DAG of computations; a few passes suffice)
+    for _ in range(20):
+        changed = False
+        new = {name: 0.0 for name in comps}
+        new[entry] = 1.0
+        for caller, callee, w in edges:
+            if callee in new:
+                new[callee] += mult.get(caller, 0.0) * w
+        for name in comps:
+            tgt = max(new[name], 1.0 if name == entry else 0.0)
+            if abs(tgt - mult[name]) > 1e-9:
+                changed = True
+            mult[name] = tgt
+        if not changed:
+            break
+    return mult
+
+
+def collective_census(hlo_text: str) -> dict:
+    """Per-collective byte totals from compiled HLO, weighted by the
+    execution count of the enclosing computation (while-aware)."""
+    comps = _split_computations(hlo_text)
+    mult = _computation_multipliers(comps)
+    out = {k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES}
+    for cname, text in comps.items():
+        w = max(mult.get(cname, 1.0), 1.0) if cname in mult else 1.0
+        for line in text.splitlines():
+            ls = line.strip()
+            for kind in _COLLECTIVES:
+                m = re.match(r"^(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.+?)\s+" + kind
+                             + r"(?:-start)?\(", ls)
+                if m:
+                    if kind + "-done(" in ls:
+                        break
+                    out[kind]["count"] += 1
+                    out[kind]["bytes"] += _tensor_bytes(m.group(1)) * w
+                    break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def applicable(arch: str, shape_name: str) -> tuple[bool, str]:
+    cfg = get_config(arch)
+    if shape_name == "long_500k" and not cfg.subquadratic:
+        return False, "full quadratic attention — 512k decode infeasible " \
+                      "by design (DESIGN.md §Arch-applicability)"
+    return True, ""
+
+
+def run_pair(arch: str, shape_name: str, multi_pod: bool,
+             extra_metadata: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+
+    with mesh:
+        specs = input_specs(cfg, shape, mesh)
+        if shape.kind == "train":
+            # microbatch to an ~8-sequence activation working set
+            from repro.launch.inputs import fl_dims
+            _, _, b_client = fl_dims(cfg, shape, mesh)
+            # FSDP clients (1/pod) re-gather weights per microbatch: use
+            # fewer, larger microbatches (measured sweet spot, §Perf G1)
+            target = 16 if cfg.clients_per_pod == 1 else 8
+            n_micro = max(b_client // target, 1)
+            rec["n_micro"] = n_micro
+            step = make_hfl_train_step(cfg, mesh=mesh, n_micro=n_micro)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, mesh=mesh)
+        else:
+            step = make_serve_step(cfg, mesh=mesh)
+
+        out_shd = output_shardings(cfg, shape, mesh)
+        # NOTE on donation: donating params/histories (train) and caches
+        # (serve) is the right production setting on TPU (in-place state
+        # update, saves ~argument_size of HBM), but XLA:CPU ignores
+        # donation and its memory_analysis then reports *larger* temp —
+        # measured +8 GiB noise at dsv2 train.  We lower without donation
+        # so the reported numbers reflect the analyzable graph
+        # (EXPERIMENTS.md §Perf, iteration D4).
+        t0 = time.time()
+        lowered = jax.jit(step, out_shardings=out_shd).lower(**specs)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            rec["memory"] = {
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)}
+            rec["bytes_per_device"] = (
+                rec["memory"].get("argument_size_in_bytes", 0)
+                + rec["memory"].get("temp_size_in_bytes", 0))
+        cost = compiled.cost_analysis()
+        if cost:
+            c = cost if isinstance(cost, dict) else cost[0]
+            rec["flops"] = float(c.get("flops", -1.0))
+            rec["hlo_bytes"] = float(c.get("bytes accessed", -1.0))
+        if extra_metadata:
+            rec["collectives"] = collective_census(compiled.as_text())
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    pairs = []
+    archs = ARCH_IDS if (args.all or not args.arch) else (args.arch,)
+    shapes = tuple(INPUT_SHAPES) if (args.all or not args.shape) \
+        else (args.shape,)
+    meshes = {"pod": (False,), "multipod": (True,),
+              "both": (False, True)}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                pairs.append((a, s, mp))
+
+    results, failures = [], 0
+    for a, s, mp in pairs:
+        ok, why = applicable(a, s)
+        label = f"{a} x {s} x {'2x16x16' if mp else '16x16'}"
+        if not ok:
+            print(f"SKIP {label}: {why}")
+            results.append({"arch": a, "shape": s,
+                            "mesh": "2x16x16" if mp else "16x16",
+                            "skipped": why})
+            continue
+        try:
+            rec = run_pair(a, s, mp)
+            coll = rec.get("collectives", {})
+            print(f"OK   {label}: compile={rec['compile_s']}s "
+                  f"flops={rec.get('flops', 0):.3e} "
+                  f"coll={coll.get('total_bytes', 0):.3e}B "
+                  f"mem/dev={rec.get('bytes_per_device', 0)/2**30:.2f}GiB")
+            results.append(rec)
+        except Exception as e:  # a failure here is a sharding bug
+            failures += 1
+            print(f"FAIL {label}: {e}")
+            traceback.print_exc()
+            results.append({"arch": a, "shape": s,
+                            "mesh": "2x16x16" if mp else "16x16",
+                            "error": str(e)})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+        print(f"wrote {args.out}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

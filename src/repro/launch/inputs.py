@@ -1,0 +1,159 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins (with shardings) for every
+model input, per (architecture × input shape × mesh).  No device allocation:
+these feed ``jax.jit(step).lower()`` directly.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.hieavg import History
+from repro.models import ArchConfig, InputShape, cache_specs, param_specs
+from repro.launch import sharding as shd
+
+PyTree = Any
+
+
+def _sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def fl_dims(cfg: ArchConfig, shape: InputShape, mesh) -> tuple[int, int, int]:
+    """(E pods, C clients/pod, per-client batch)."""
+    e = shd.mesh_axis_size(mesh, "pod") if hasattr(shd, "mesh_axis_size") \
+        else mesh.shape.get("pod", 1)
+    c = cfg.clients_per_pod
+    b = max(shape.global_batch // (e * c), 1)
+    return e, c, b
+
+
+def _memory_shape(cfg: ArchConfig) -> Optional[tuple[int, int]]:
+    """(frames, d_model) of the stubbed modality frontend, if any."""
+    if cfg.encoder is not None:
+        return cfg.encoder.n_frames, cfg.d_model
+    if "xattn" in cfg.block_pattern:
+        return cfg.n_image_tokens, cfg.d_model
+    return None
+
+
+# ------------------------------------------------------------------ train
+# History storage dtype override (beyond-paper, §Perf X1): float8_e4m3fn
+# halves HieAvg's 4-extra-model-copies cost; None = parameter dtype.
+HIST_DTYPE = None
+
+
+def train_input_specs(cfg: ArchConfig, shape: InputShape, mesh) -> dict:
+    """Inputs of ``make_hfl_train_step``'s step function (Layout A)."""
+    assert shape.kind == "train", shape
+    e, c, b = fl_dims(cfg, shape, mesh)
+    rules = shd.train_rules(cfg.clients_per_pod)
+    prefix = ((e, "fl_pods"), (c, "fl_clients"))
+    dt = cfg.jnp_param_dtype
+    hdt = HIST_DTYPE or dt
+
+    params, _ = shd.shard_abstract(param_specs(cfg), rules, mesh,
+                                   prefix=prefix, dtype=dt)
+    hist_params, _ = shd.shard_abstract(param_specs(cfg), rules, mesh,
+                                        prefix=prefix, dtype=hdt)
+    glob_params, _ = shd.shard_abstract(param_specs(cfg), rules, mesh,
+                                        prefix=((e, "fl_pods"),), dtype=hdt)
+
+    pod_ax = "pod" if "pod" in mesh.shape else None
+    cli_ax = "data" if cfg.clients_per_pod > 1 else None
+    bat_ax = "data" if cfg.clients_per_pod == 1 else None
+    tok = _sds((e, c, b, shape.seq_len), jnp.int32, mesh,
+               P(pod_ax, cli_ax, bat_ax))
+    batch = {"tokens": tok, "labels": tok}
+    mem = _memory_shape(cfg)
+    if mem is not None:
+        batch["memory"] = _sds((e, c, b) + mem, dt, mesh,
+                               P(pod_ax, cli_ax, bat_ax))
+
+    def hist_of(tree, n_shape, n_spec):
+        return History(
+            prev_w=tree, delta_mean=tree,
+            n_obs=_sds(n_shape, jnp.float32, mesh, n_spec),
+            miss_count=_sds(n_shape, jnp.float32, mesh, n_spec))
+
+    dev_hist = hist_of(hist_params, (e, c), P(pod_ax, cli_ax))
+    glob_hist = hist_of(glob_params, (e,), P(pod_ax))
+
+    return dict(
+        params=params,
+        dev_hist=dev_hist,
+        glob_hist=glob_hist,
+        batch=batch,
+        dev_mask=_sds((e, c), jnp.bool_, mesh, P(pod_ax, cli_ax)),
+        edge_mask=_sds((e,), jnp.bool_, mesh, P(pod_ax)),
+        lr=jax.ShapeDtypeStruct((), jnp.float32),
+    )
+
+
+# ------------------------------------------------------------------ serve
+def serve_param_specs(cfg: ArchConfig, mesh) -> PyTree:
+    dt = cfg.jnp_param_dtype
+    params, _ = shd.shard_abstract(param_specs(cfg), shd.SERVE_RULES, mesh,
+                                   dtype=dt)
+    return params
+
+
+def serve_input_specs(cfg: ArchConfig, shape: InputShape, mesh) -> dict:
+    """Inputs of prefill_step (kind=prefill) / serve_step (kind=decode)."""
+    b = shape.global_batch
+    dt = cfg.jnp_param_dtype
+    params = serve_param_specs(cfg, mesh)
+
+    cs = cache_specs(cfg, b, shape.seq_len, dtype=dt)
+    caches, _ = shd.shard_abstract(cs, shd.SERVE_RULES, mesh)
+
+    bspec = shd.resolve_spec((b,), ("act_batch",), shd.SERVE_RULES, mesh)
+    bax = bspec[0] if len(bspec) else None
+
+    out = dict(params=params, caches=caches)
+    mem = _memory_shape(cfg)
+    if shape.kind == "prefill":
+        out["tokens"] = _sds((b, shape.seq_len), jnp.int32, mesh, P(bax))
+    else:
+        out["token"] = _sds((b, 1), jnp.int32, mesh, P(bax))
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    if mem is not None:
+        # decode consumes *pre-encoded* memory (encoder runs at prefill)
+        out["memory"] = _sds((b,) + mem, dt, mesh, P(bax))
+    return out
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, mesh) -> dict:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape, mesh)
+    return serve_input_specs(cfg, shape, mesh)
+
+
+# -------------------------------------------------------- output shardings
+def _sharding_like(struct_tree) -> PyTree:
+    """Extract the NamedSharding pytree from sharding-attached SDS leaves."""
+    return jax.tree.map(lambda s: s.sharding, struct_tree)
+
+
+def output_shardings(cfg: ArchConfig, shape: InputShape, mesh):
+    """Explicit out_shardings for the step compiled by the dry-run.
+
+    Without these, GSPMD is free to replicate the broadcast global model
+    back into the [E, C, ...] client slots, inflating per-device output
+    bytes by ExC.
+    """
+    specs = input_specs(cfg, shape, mesh)
+    if shape.kind == "train":
+        scalar = NamedSharding(mesh, P())
+        return (_sharding_like(specs["params"]),
+                _sharding_like(specs["dev_hist"]),
+                _sharding_like(specs["glob_hist"]),
+                scalar)
+    b = shape.global_batch
+    logits_spec = shd.resolve_spec((b, cfg.vocab), ("act_batch", "vocab"),
+                                   shd.SERVE_RULES, mesh)
+    logits = NamedSharding(mesh, logits_spec)
+    return (logits, _sharding_like(specs["caches"]))

@@ -1,0 +1,37 @@
+"""Production meshes for the TPU v5e deployment (see DESIGN.md §3).
+
+Single pod: (data=16, model=16) = 256 chips.  Multi-pod: (pod=2, data=16,
+model=16) = 512 chips; the ``pod`` axis is the BHFL edge-server axis — the
+slow, straggler-prone inter-pod link that HieAvg's hierarchy amortizes.
+
+``make_production_mesh`` is a function (never a module-level constant) so
+importing this module touches no jax device state.  The dry-run launcher
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` *before* any
+jax import; smoke tests and benchmarks see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW = 50e9                   # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1, pod: int = 1
+                    ) -> jax.sharding.Mesh:
+    """Tiny mesh over however many devices exist (tests: 1 CPU device)."""
+    if pod > 1:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axis_size(mesh: jax.sharding.Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1

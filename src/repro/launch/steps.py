@@ -1,0 +1,259 @@
+"""SPMD step functions: hierarchical FL training + serving.
+
+Layout A (train): every parameter leaf is ``[E, C, *shape]`` — E pods
+(edge servers), C clients per pod.  One ``hfl_train_step`` performs
+
+  1. per-client local SGD (vmapped over E and C; remat'd forward),
+  2. HieAvg edge aggregation over C   (all-reduce on the ``data`` axis),
+  3. HieAvg global aggregation over E (all-reduce on the ``pod`` axis),
+  4. broadcast of the global model back to every client slot.
+
+This is the paper's full global round (K=1 compiled in-line; the driver
+loops edge rounds and calls the global step every K-th round).  Straggler
+masks are runtime inputs, so one compiled step serves any schedule.
+
+Layout B (serve): plain parameter pytrees; ``prefill_step`` fills KV/state
+caches, ``serve_step`` decodes ONE token against a ``seq_len`` cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hieavg
+from repro.models import ArchConfig, loss_fn, prefill, decode_step
+from repro.models import moe as moe_mod
+from repro.optim import sgd_step  # noqa: F401 (re-export for drivers)
+
+PyTree = Any
+
+
+def _set_moe_hint(cfg: ArchConfig, mesh) -> None:
+    """Enable the GShard expert-parallel all-to-all when E divides the
+    model axis (see models/moe.EXPERT_PARALLEL_SPEC), and the SP->TP
+    head-sharded attention when the head counts divide it
+    (models/attention.HEAD_SPEC)."""
+    from repro.models import attention as att_mod
+    if (mesh is not None and cfg.moe is not None
+            and mesh.shape.get("model", 1) > 1
+            and cfg.moe.n_experts % mesh.shape["model"] == 0):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        moe_mod.EXPERT_PARALLEL_SPEC = (
+            NamedSharding(mesh, P(None, "model", None, None, None)),
+            NamedSharding(mesh, P(None, None, "model", None, None)))
+    else:
+        moe_mod.EXPERT_PARALLEL_SPEC = None
+    model_sz = mesh.shape.get("model", 1) if mesh is not None else 1
+    kv_ok = (cfg.mla is not None) or (cfg.n_kv_heads % model_sz == 0)
+    if model_sz > 1 and cfg.n_heads % model_sz == 0 and kv_ok:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        att_mod.HEAD_SPEC = NamedSharding(mesh, P(None, None, "model", None))
+        att_mod.KV_GATHER_SPEC = None
+    else:
+        att_mod.HEAD_SPEC = None
+        if (model_sz > 1 and cfg.mla is None
+                and cfg.n_heads % model_sz != 0):
+            # q-heads don't divide the model axis (qwen3-class): hoist the
+            # K/V gather out of the q-chunk loop (one gather per layer).
+            # Not for MLA (expanded per-head K too large to replicate) and
+            # not for GQA archs whose q-heads do divide (grok: measured
+            # +12% collectives) — see §Perf Q1.
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            att_mod.KV_GATHER_SPEC = NamedSharding(mesh, P())
+        else:
+            att_mod.KV_GATHER_SPEC = None
+
+
+# -------------------------------------------------------------- train (A)
+def _per_client_grad(params: PyTree, tokens, labels, memory, cfg: ArchConfig,
+                     remat: bool, act_spec=None):
+    """loss/grad vmapped over the two FL dims. params leaves [E, C, ...]."""
+
+    def one(p, t, l, m):
+        return loss_fn(p, t, l, cfg, memory_embeds=m, remat=remat,
+                       act_spec=act_spec)
+
+    fn = jax.value_and_grad(one)
+    fn = jax.vmap(fn)                     # over C
+    fn = jax.vmap(fn)                     # over E
+    return fn(params, tokens, labels, memory)
+
+
+def make_hfl_train_step(cfg: ArchConfig, *, gamma0: float = 0.9,
+                        lam: float = 0.9, do_global: bool = True,
+                        remat: bool = True, normalize: bool = False,
+                        mesh=None, n_micro: int = 1):
+    """Returns step(params, dev_hist, glob_hist, batch, dev_mask, edge_mask,
+    lr) -> (params, dev_hist, glob_hist, loss).
+
+    ``dev_hist`` leaves [E, C, ...] (per-edge device histories);
+    ``glob_hist`` leaves [E, ...] (edge-model history at the leader).
+    ``batch``: dict(tokens [E,C,b,S], labels [E,C,b,S], memory optional).
+    ``dev_mask`` [E, C] bool; ``edge_mask`` [E] bool.
+    ``n_micro`` > 1 splits each client's batch into microbatches with
+    gradient accumulation (mean) — same SGD math, 1/n_micro the
+    activation working set.
+    """
+
+    edge_agg = jax.vmap(functools.partial(
+        hieavg.edge_aggregate, gamma0=gamma0, lam=lam, normalize=normalize))
+
+    _set_moe_hint(cfg, mesh)
+    # explicit shardings for the microbatch grad accumulator — an
+    # unconstrained zeros carry makes GSPMD re-gather every weight
+    # gradient on every scan iteration (§Perf A2)
+    from repro.models import param_specs as _pspecs
+    if mesh is not None and n_micro > 1:
+        from repro.launch import sharding as shd_mod
+        e_sz = mesh.shape.get("pod", 1)
+        grad_shardings = shd_mod.shard_specs(
+            _pspecs(cfg), shd_mod.train_rules(cfg.clients_per_pod), mesh,
+            prefix=((e_sz, "fl_pods"), (cfg.clients_per_pod, "fl_clients")))
+    else:
+        grad_shardings = jax.tree.map(
+            lambda s: None, _pspecs(cfg),
+            is_leaf=lambda x: hasattr(x, "axes"))
+    act_spec = None
+    if mesh is not None and mesh.shape.get("model", 1) > 1:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        # per-client activations [b, s, d]: shard s over the model axis
+        # (sequence parallelism).  With one client per pod (grok-scale) the
+        # data axis is free too — shard the big per-pod batch over it.
+        bax = "data" if (cfg.clients_per_pod == 1
+                         and mesh.shape.get("data", 1) > 1) else None
+        act_spec = NamedSharding(mesh, P(bax, "model", None))
+
+    def grads_of(params, tokens, labels, memory):
+        if n_micro == 1:
+            return _per_client_grad(params, tokens, labels, memory, cfg,
+                                    remat, act_spec)
+        e, c, b = tokens.shape[:3]
+        mb = b // n_micro
+
+        def split(t):
+            if t is None:
+                return None
+            return jnp.moveaxis(
+                t.reshape((e, c, n_micro, mb) + t.shape[3:]), 2, 0)
+
+        def body(carry, xs):
+            loss_acc, grad_acc = carry
+            tk, lb, mem = xs
+            loss, grads = _per_client_grad(params, tk, lb, mem, cfg,
+                                           remat, act_spec)
+            return (loss_acc + loss,
+                    jax.tree.map(jnp.add, grad_acc, grads)), None
+
+        def zeros_like_sharded(p, sh):
+            z = jnp.zeros(p.shape, jnp.float32)
+            return (jax.lax.with_sharding_constraint(z, sh)
+                    if sh is not None else z)
+
+        zero = (jnp.zeros(tokens.shape[:2], jnp.float32),
+                jax.tree.map(zeros_like_sharded, params, grad_shardings))
+        xs = (split(tokens), split(labels), split(memory))
+        if memory is None:
+            xs = (split(tokens), split(labels),
+                  jnp.zeros((n_micro,), jnp.float32))  # dummy leaf
+
+            def body(carry, xs):  # noqa: F811 — memory-free variant
+                loss_acc, grad_acc = carry
+                tk, lb, _ = xs
+                loss, grads = _per_client_grad(params, tk, lb, None, cfg,
+                                               remat, act_spec)
+                return (loss_acc + loss,
+                        jax.tree.map(jnp.add, grad_acc, grads)), None
+        (loss, grads), _ = jax.lax.scan(body, zero, xs)
+        inv = 1.0 / n_micro
+        return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+    def step(params, dev_hist, glob_hist, batch, dev_mask, edge_mask, lr):
+        tokens, labels = batch["tokens"], batch["labels"]
+        memory = batch.get("memory")
+        loss, grads = grads_of(params, tokens, labels, memory)
+        # local SGD (paper's optimizer; lr is the paper's decayed eta^{t,k})
+        params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+
+        # edge aggregation: HieAvg over the C clients of each pod
+        edge_models, dev_hist = edge_agg(params, dev_mask, dev_hist)
+
+        if do_global:
+            # global aggregation over pods on the Raft leader (J_i equal
+            # per pod here: every pod hosts C client groups)
+            e = dev_mask.shape[0]
+            j_per_edge = jnp.full((e,), dev_mask.shape[1], jnp.float32)
+            global_model, glob_hist = hieavg.global_aggregate(
+                edge_models, edge_mask, glob_hist, j_per_edge,
+                gamma0=gamma0, lam=lam, normalize=normalize)
+            # broadcast the new global model into every client slot
+            c = dev_mask.shape[1]
+            params = jax.tree.map(
+                lambda g, p: jnp.broadcast_to(
+                    g[None, None].astype(p.dtype), p.shape),
+                global_model, params)
+        else:
+            # devices sync to their pod's edge model
+            params = jax.tree.map(
+                lambda em, p: jnp.broadcast_to(
+                    em[:, None].astype(p.dtype), p.shape),
+                edge_models, params)
+
+        return params, dev_hist, glob_hist, jnp.mean(loss)
+
+    return step
+
+
+def init_fl_histories(params: PyTree) -> tuple[hieavg.History, hieavg.History]:
+    """(dev_hist leaves [E,C,...], glob_hist leaves [E,...]) from Layout-A
+    params — cold-boot initialization (Alg. 1)."""
+    dev_hist = jax.vmap(hieavg.init_history)(params)
+    edge0 = jax.tree.map(lambda p: jnp.mean(p.astype(jnp.float32), axis=1),
+                         params)
+    glob_hist = hieavg.init_history(edge0)
+    return dev_hist, glob_hist
+
+
+# -------------------------------------------------------------- serve (B)
+def make_prefill_step(cfg: ArchConfig, mesh=None):
+    """(params, tokens [B,S], caches, memory?) -> (logits [B,V], caches)."""
+    _set_moe_hint(cfg, mesh)
+
+    def step(params, tokens, caches, memory=None):
+        return prefill(params, tokens, cfg, caches, memory_embeds=memory)
+
+    return step
+
+
+def make_serve_step(cfg: ArchConfig, mesh=None):
+    """One-token decode: (params, token [B,1], pos, caches, memory?) ->
+    (logits [B,V], new caches).  ``pos`` is the current absolute position
+    (cache holds positions < pos)."""
+    _set_moe_hint(cfg, mesh)
+
+    def step(params, token, pos, caches, memory=None):
+        return decode_step(params, token, pos, cfg, caches, memory=memory)
+
+    return step
+
+
+def make_train_step(cfg: ArchConfig, remat: bool = True):
+    """Plain (non-FL) data-parallel train step for Layout B params —
+    the W/O-stragglers oracle at datacenter scale, and the baseline the
+    paper compares its hierarchy against."""
+
+    def step(params, tokens, labels, lr, memory=None):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, tokens, labels, cfg, memory_embeds=memory, remat=remat)
+        params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return params, loss
+
+    return step

@@ -1,0 +1,70 @@
+"""The paper's MNIST CNN (Sec. 6.1.5): two conv layers, one max-pool, one
+flatten, one dense layer.  Used by the BHFL simulator and Fig. 2-6 repros."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .spec import ParamSpec
+
+
+def cnn_specs(image_hw: int = 28, channels: int = 1, n_classes: int = 10,
+              c1: int = 32, c2: int = 64) -> dict:
+    pooled = image_hw // 2  # one 2x2 max-pool after the convs (SAME padding)
+    flat = pooled * pooled * c2
+    return {
+        "conv1": ParamSpec((3, 3, channels, c1), (None, None, None, None)),
+        "b1": ParamSpec((c1,), (None,), init="zeros"),
+        "conv2": ParamSpec((3, 3, c1, c2), (None, None, None, None)),
+        "b2": ParamSpec((c2,), (None,), init="zeros"),
+        "dense": ParamSpec((flat, n_classes), (None, None)),
+        "b3": ParamSpec((n_classes,), (None,), init="zeros"),
+    }
+
+
+def _conv3x3_same(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """3x3 SAME conv via im2col + einsum.
+
+    Pure dot-products instead of lax.conv: XLA:CPU's batched conv gradients
+    (batch_group_count under vmap) are orders of magnitude slower than the
+    equivalent matmul, and the FL simulator vmaps over dozens of devices.
+    x: [..., H, W, Cin]; w: [3, 3, Cin, Cout].
+    """
+    h, wd = x.shape[-3], x.shape[-2]
+    pad = [(0, 0)] * (x.ndim - 3) + [(1, 1), (1, 1), (0, 0)]
+    xp = jnp.pad(x, pad)
+    # sum of 9 shifted matmuls — no 9x im2col memory blowup
+    out = None
+    for i in range(3):
+        for j in range(3):
+            term = jnp.einsum("...c,co->...o",
+                              xp[..., i:i + h, j:j + wd, :], w[i, j])
+            out = term if out is None else out + term
+    return out
+
+
+def cnn_apply(params: dict, images: jnp.ndarray) -> jnp.ndarray:
+    """images [B, H, W, C] -> logits [B, n_classes]."""
+    x = images
+    for w, b in ((params["conv1"], params["b1"]),
+                 (params["conv2"], params["b2"])):
+        x = jax.nn.relu(_conv3x3_same(x, w) + b)
+    # 2x2 stride-2 max-pool via reshape — identical to reduce_window but its
+    # gradient avoids SelectAndScatter, which is pathologically slow on CPU.
+    b, h, w_, c = x.shape
+    x = x.reshape(b, h // 2, 2, w_ // 2, 2, c).max(axis=(2, 4))
+    x = x.reshape(x.shape[0], -1)
+    return x @ params["dense"] + params["b3"]
+
+
+def cnn_loss(params: dict, images: jnp.ndarray, labels: jnp.ndarray
+             ) -> jnp.ndarray:
+    logits = cnn_apply(params, images)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def cnn_accuracy(params: dict, images: jnp.ndarray, labels: jnp.ndarray
+                 ) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(cnn_apply(params, images), -1) == labels)
+                    .astype(jnp.float32))

@@ -1,0 +1,61 @@
+"""Shared layers: norms, MLPs, embeddings — functional, spec-driven."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .spec import ParamSpec
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def norm_spec(d: int, prefix_axes: tuple = (), prefix_shape: tuple = ()) -> ParamSpec:
+    return ParamSpec(prefix_shape + (d,), prefix_axes + (None,), init="ones")
+
+
+# ----------------------------------------------------------------- dense mlp
+def mlp_specs(cfg: ArchConfig, stacked: Optional[int]) -> dict:
+    """SwiGLU MLP: gate/up [d_model, d_ff], down [d_ff, d_model]."""
+    pre_s = (stacked,) if stacked else ()
+    pre_a = ("layers",) if stacked else ()
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "gate": ParamSpec(pre_s + (d, f), pre_a + ("embed", "mlp")),
+        "up": ParamSpec(pre_s + (d, f), pre_a + ("embed", "mlp")),
+        "down": ParamSpec(pre_s + (f, d), pre_a + ("mlp", "embed")),
+        "norm": norm_spec(d, pre_a, pre_s),
+    }
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    h = rms_norm(x, p["norm"], eps)
+    g = jnp.einsum("...d,df->...f", h, p["gate"])
+    u = jnp.einsum("...d,df->...f", h, p["up"])
+    out = jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u, p["down"])
+    return x + out
+
+
+# ---------------------------------------------------------------- embeddings
+def embed_specs(cfg: ArchConfig) -> dict:
+    out = {"tok": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    out["final_norm"] = norm_spec(cfg.d_model)
+    return out
+
+
+def embed_apply(p: dict, tokens: jnp.ndarray, compute_dtype) -> jnp.ndarray:
+    return p["tok"].astype(compute_dtype)[tokens]
+
+
+def unembed_apply(p: dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    h = rms_norm(x, p["final_norm"], cfg.norm_eps)
+    head = p["tok"].T if cfg.tie_embeddings else p["lm_head"]
+    return jnp.einsum("...d,dv->...v", h, head.astype(x.dtype))

@@ -1,0 +1,157 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+KV is compressed into a latent ``c_kv`` of rank ``kv_lora_rank`` plus a
+shared (across heads) RoPE key of ``qk_rope_head_dim`` — the decode cache
+stores only ``[B, S, kv_lora + rope]`` instead of ``[B, S, Hkv, Dh]``.
+
+Decode uses the *matrix-absorption* trick: q_nope is projected into latent
+space (absorbing W_uk) so attention logits and value mixing run directly on
+the compressed cache — the per-token expansion of K/V never materializes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import NEG_INF, _head_shard, _sdpa, apply_rope
+from .config import ArchConfig
+from .layers import norm_spec, rms_norm
+from .spec import ParamSpec
+
+
+def mla_specs(cfg: ArchConfig, stacked: Optional[int]) -> dict:
+    m = cfg.mla
+    pre_s = (stacked,) if stacked else ()
+    pre_a = ("layers",) if stacked else ()
+    d, h = cfg.d_model, cfg.n_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    out = {
+        "w_dkv": ParamSpec(pre_s + (d, m.kv_lora_rank), pre_a + ("embed", None)),
+        "kv_norm": norm_spec(m.kv_lora_rank, pre_a, pre_s),
+        "w_kr": ParamSpec(pre_s + (d, m.qk_rope_head_dim), pre_a + ("embed", None)),
+        "w_uk": ParamSpec(pre_s + (m.kv_lora_rank, h, m.qk_nope_head_dim),
+                          pre_a + (None, "heads", None)),
+        "w_uv": ParamSpec(pre_s + (m.kv_lora_rank, h, m.v_head_dim),
+                          pre_a + (None, "heads", None)),
+        "wo": ParamSpec(pre_s + (h, m.v_head_dim, d), pre_a + ("heads", None, "embed")),
+        "norm": norm_spec(d, pre_a, pre_s),
+    }
+    if m.q_lora_rank:
+        out["w_dq"] = ParamSpec(pre_s + (d, m.q_lora_rank), pre_a + ("embed", None))
+        out["q_norm"] = norm_spec(m.q_lora_rank, pre_a, pre_s)
+        out["w_uq"] = ParamSpec(pre_s + (m.q_lora_rank, h, qk),
+                                pre_a + (None, "heads", None))
+    else:
+        out["wq"] = ParamSpec(pre_s + (d, h, qk), pre_a + ("embed", "heads", None))
+    return out
+
+
+def _q_proj(p: dict, h: jnp.ndarray, cfg: ArchConfig):
+    m = cfg.mla
+    if m.q_lora_rank:
+        ql = rms_norm(jnp.einsum("...d,dr->...r", h, p["w_dq"]), p["q_norm"],
+                      cfg.norm_eps)
+        q = jnp.einsum("...r,rhk->...hk", ql, p["w_uq"])
+    else:
+        q = jnp.einsum("...d,dhk->...hk", h, p["wq"])
+    return jnp.split(q, [m.qk_nope_head_dim], axis=-1)  # (q_nope, q_rope)
+
+
+def mla_train(p: dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Full-sequence causal MLA. x: [B, S, D]."""
+    m = cfg.mla
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q_nope, q_rope = _q_proj(p, h, cfg)
+    c_kv = rms_norm(jnp.einsum("...d,dr->...r", h, p["w_dkv"]), p["kv_norm"],
+                    cfg.norm_eps)
+    k_rope = jnp.einsum("...d,dr->...r", h, p["w_kr"])        # [B,S,rope]
+    s = x.shape[-2]
+    pos = jnp.arange(s)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[..., None, :], pos, cfg.rope_theta)[..., 0, :]
+    k_nope = jnp.einsum("...sr,rhk->...shk", c_kv, p["w_uk"])  # [B,S,H,nope]
+    v = jnp.einsum("...sr,rhk->...shk", c_kv, p["w_uv"])
+    # expand to per-head K (nope || rope) and reuse the chunked SDPA — the
+    # [S, S] logits never materialize in full (see attention._sdpa)
+    nh = k_nope.shape[-2]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[..., None, :],
+                                  k_nope.shape[:-1] + (m.qk_rope_head_dim,))],
+        axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    pad = m.qk_nope_head_dim + m.qk_rope_head_dim - m.v_head_dim
+    v_pad = jnp.pad(v, ((0, 0),) * (v.ndim - 1) + ((0, pad),)) if pad else v
+    q_full, k_full, v_pad = _head_shard(q_full, k_full, v_pad)
+    attn = _sdpa(q_full, k_full, v_pad, causal=True)
+    attn = attn[..., :m.v_head_dim] if pad else attn
+    out = jnp.einsum("...hk,hkd->...d", attn.astype(x.dtype), p["wo"])
+    return x + out
+
+
+def mla_cache_spec(cfg: ArchConfig, batch: int, max_len: int,
+                   stacked: Optional[int], dtype=jnp.bfloat16) -> dict:
+    m = cfg.mla
+    pre_s = (stacked,) if stacked else ()
+    pre_a = ("layers",) if stacked else ()
+    return {
+        "c_kv": ParamSpec(pre_s + (batch, max_len, m.kv_lora_rank),
+                          pre_a + ("act_batch", "kv_seq", None), dtype, "zeros"),
+        "k_rope": ParamSpec(pre_s + (batch, max_len, m.qk_rope_head_dim),
+                            pre_a + ("act_batch", "kv_seq", None), dtype, "zeros"),
+    }
+
+
+def mla_prefill(p: dict, x: jnp.ndarray, cfg: ArchConfig, cache: dict
+                ) -> tuple[jnp.ndarray, dict]:
+    m = cfg.mla
+    out = mla_train(p, x, cfg)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    c_kv = rms_norm(jnp.einsum("...d,dr->...r", h, p["w_dkv"]), p["kv_norm"],
+                    cfg.norm_eps)
+    k_rope = jnp.einsum("...d,dr->...r", h, p["w_kr"])
+    pos = jnp.arange(x.shape[-2])
+    k_rope = apply_rope(k_rope[..., None, :], pos, cfg.rope_theta)[..., 0, :]
+    s = x.shape[-2]
+    keep = min(s, cache["c_kv"].shape[-2])
+    return out, {
+        "c_kv": jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv[..., -keep:, :].astype(cache["c_kv"].dtype),
+            0, axis=-2),
+        "k_rope": jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[..., -keep:, :].astype(cache["k_rope"].dtype),
+            0, axis=-2)}
+
+
+def mla_decode(p: dict, x: jnp.ndarray, cfg: ArchConfig, cache: dict,
+               pos: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    """Absorbed one-token decode on the compressed cache. x: [B, 1, D]."""
+    m = cfg.mla
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q_nope, q_rope = _q_proj(p, h, cfg)                        # [B,1,H,*]
+    q_rope = apply_rope(q_rope, pos[None], cfg.rope_theta)
+    c_new = rms_norm(jnp.einsum("...d,dr->...r", h, p["w_dkv"]), p["kv_norm"],
+                     cfg.norm_eps)
+    kr_new = jnp.einsum("...d,dr->...r", h, p["w_kr"])
+    kr_new = apply_rope(kr_new[..., None, :], pos[None], cfg.rope_theta)[..., 0, :]
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=-2)
+    ckr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=-2)
+    # absorb W_uk into q: [B,1,H,nope] x [r,H,nope] -> [B,1,H,r]
+    q_lat = jnp.einsum("bqhk,rhk->bqhr", q_nope.astype(jnp.float32),
+                       p["w_uk"].astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat, ck.astype(jnp.float32))
+              + jnp.einsum("bqhk,bsk->bhqs", q_rope.astype(jnp.float32),
+                           ckr.astype(jnp.float32))) * scale
+    clen = ck.shape[-2]
+    valid = jnp.arange(clen) <= pos
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    # value mixing in latent space, then expand through W_uv
+    lat = jnp.einsum("bhqs,bsr->bqhr", probs, ck.astype(jnp.float32))
+    attn = jnp.einsum("bqhr,rhk->bqhk", lat, p["w_uv"].astype(jnp.float32))
+    out = jnp.einsum("...hk,hkd->...d", attn.astype(x.dtype), p["wo"])
+    return x + out, {"c_kv": ck, "k_rope": ckr}

@@ -1,0 +1,159 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block = temporal conv1d (width 4) -> gated linear recurrence:
+
+    r_t = sigmoid(W_a x_t),  i_t = sigmoid(W_x x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is linear in h, so train/prefill use a parallel associative
+scan over time (log-depth on TPU); decode is the one-step update.  The full
+block is the Griffin "recurrent block": two branches (gate + recurrence) and
+an output projection, residual added by the caller pattern.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import norm_spec, rms_norm
+from .spec import ParamSpec
+
+
+def rglru_specs(cfg: ArchConfig, stacked: Optional[int]) -> dict:
+    r = cfg.rglru
+    w = r.lru_width or cfg.d_model
+    pre_s = (stacked,) if stacked else ()
+    pre_a = ("layers",) if stacked else ()
+    d = cfg.d_model
+    return {
+        "w_in": ParamSpec(pre_s + (d, w), pre_a + ("embed", "mlp")),
+        "w_gate": ParamSpec(pre_s + (d, w), pre_a + ("embed", "mlp")),
+        "conv_w": ParamSpec(pre_s + (r.d_conv, w), pre_a + (None, "mlp")),
+        "w_a": ParamSpec(pre_s + (w, w), pre_a + ("mlp", None)),
+        "w_i": ParamSpec(pre_s + (w, w), pre_a + ("mlp", None)),
+        "lam": ParamSpec(pre_s + (w,), pre_a + (None,), init="ones"),
+        "w_out": ParamSpec(pre_s + (w, d), pre_a + ("mlp", "embed")),
+        "norm": norm_spec(d, pre_a, pre_s),
+    }
+
+
+def _gates(p: dict, u: jnp.ndarray, cfg: ArchConfig):
+    """a_t (log-space) and gated input for the recurrence."""
+    r = cfg.rglru
+    rec_gate = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_a"]))
+    in_gate = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_i"]))
+    log_a = -r.c_constant * jax.nn.softplus(p["lam"]) * rec_gate.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (in_gate * u).astype(jnp.float32)
+    return a, gated_x
+
+
+def _conv(p: dict, u: jnp.ndarray, state: Optional[jnp.ndarray] = None):
+    """Causal depthwise conv over time. u: [B,S,W]. state: [B,d_conv-1,W]."""
+    k = p["conv_w"].shape[0]
+    pad = state if state is not None else jnp.zeros(
+        u.shape[:-2] + (k - 1, u.shape[-1]), u.dtype)
+    full = jnp.concatenate([pad, u], axis=-2)
+    out = sum(full[..., i:i + u.shape[-2], :] * p["conv_w"][i] for i in range(k))
+    new_state = full[..., -(k - 1):, :]
+    return out, new_state
+
+
+SCAN_CHUNK = 256
+
+
+def _combine(c1, c2):
+    a1, b1 = c1
+    a2, b2 = c2
+    return a1 * a2, b1 * a2 + b2
+
+
+def linear_scan(a: jnp.ndarray, gx: jnp.ndarray, h0=None,
+                chunk: int = SCAN_CHUNK):
+    """h_t = a_t * h_{t-1} + gx_t along axis -2, chunked.
+
+    a/gx: [B, S, W] (f32).  A full-sequence associative scan materializes
+    O(log S) copies of [B, S, W] — tens of GB at 4k x 4096; chunking caps
+    the working set at [B, chunk, W] * log(chunk) with a tiny [B, W] carry
+    across chunks.  Returns (h [B, S, W], h_final [B, W]).
+    """
+    b, s, w = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((b, w), jnp.float32)
+    pad = (-s) % chunk
+    if pad:  # pad with identity elements (a=1, gx=0)
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        gx = jnp.pad(gx, ((0, 0), (0, pad), (0, 0)))
+    nc = a.shape[1] // chunk
+    ac = jnp.moveaxis(a.reshape(b, nc, chunk, w), 1, 0)    # [nc,B,C,W]
+    gc = jnp.moveaxis(gx.reshape(b, nc, chunk, w), 1, 0)
+
+    def outer(h, xs):
+        a_c, g_c = xs                                       # [B, C, W]
+        A, H = jax.lax.associative_scan(_combine, (a_c, g_c), axis=-2)
+        H = H + A * h[:, None, :]
+        return H[:, -1, :], H
+
+    h_fin, hs = jax.lax.scan(outer, h0, (ac, gc))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(b, nc * chunk, w)[:, :s]
+    return hs, h_fin
+
+
+def rglru_train(p: dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """Full-sequence recurrent block via chunked linear scan. x: [B,S,D]."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    u = jnp.einsum("...d,dw->...w", h, p["w_in"])
+    gate = jax.nn.gelu(jnp.einsum("...d,dw->...w", h, p["w_gate"]))
+    u, _ = _conv(p, u)
+    a, gx = _gates(p, u, cfg)
+    h_s, _ = linear_scan(a, gx)
+    out = (h_s.astype(x.dtype) * gate)
+    return x + jnp.einsum("...w,wd->...d", out, p["w_out"])
+
+
+def rglru_cache_spec(cfg: ArchConfig, batch: int, stacked: Optional[int],
+                     dtype=jnp.float32) -> dict:
+    r = cfg.rglru
+    w = r.lru_width or cfg.d_model
+    pre_s = (stacked,) if stacked else ()
+    pre_a = ("layers",) if stacked else ()
+    return {
+        "h": ParamSpec(pre_s + (batch, w), pre_a + ("act_batch", "mlp"),
+                       dtype, "zeros"),
+        "conv": ParamSpec(pre_s + (batch, r.d_conv - 1, w),
+                          pre_a + ("act_batch", None, "mlp"), dtype, "zeros"),
+    }
+
+
+def rglru_prefill(p: dict, x: jnp.ndarray, cfg: ArchConfig, cache: dict
+                  ) -> tuple[jnp.ndarray, dict]:
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    u = jnp.einsum("...d,dw->...w", h, p["w_in"])
+    gate = jax.nn.gelu(jnp.einsum("...d,dw->...w", h, p["w_gate"]))
+    u, conv_state = _conv(p, u)
+    a, gx = _gates(p, u, cfg)
+    h_s, h_fin = linear_scan(a, gx, cache["h"].astype(jnp.float32))
+    out = (h_s.astype(x.dtype) * gate)
+    new_cache = {"h": h_fin.astype(cache["h"].dtype),
+                 "conv": conv_state.astype(cache["conv"].dtype)}
+    return x + jnp.einsum("...w,wd->...d", out, p["w_out"]), new_cache
+
+
+def rglru_decode(p: dict, x: jnp.ndarray, cfg: ArchConfig, cache: dict
+                 ) -> tuple[jnp.ndarray, dict]:
+    """One-step recurrence. x: [B,1,D]."""
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    u = jnp.einsum("...d,dw->...w", h, p["w_in"])
+    gate = jax.nn.gelu(jnp.einsum("...d,dw->...w", h, p["w_gate"]))
+    u, conv_state = _conv(p, u, cache["conv"].astype(u.dtype))
+    a, gx = _gates(p, u, cfg)
+    h_new = a[..., 0, :] * cache["h"].astype(jnp.float32) + gx[..., 0, :]
+    out = (h_new[..., None, :].astype(x.dtype) * gate)
+    new_cache = {"h": h_new.astype(cache["h"].dtype),
+                 "conv": conv_state.astype(cache["conv"].dtype)}
+    return x + jnp.einsum("...w,wd->...d", out, p["w_out"]), new_cache

@@ -1,0 +1,65 @@
+"""Parameter/activation specs with logical sharding axes.
+
+Every parameter is described by a ``ParamSpec`` carrying *logical* axis names
+(e.g. ``("layers", "embed", "mlp")``).  The launch layer maps logical names to
+mesh axes per runtime (train Layout A / serve Layout B / FSDP Layout C) — see
+``repro.launch.sharding``.  Models never mention mesh axes directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    dtype: Any = jnp.float32
+    init: str = "normal"              # normal | zeros | ones | scaled
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def init_from_specs(specs: PyTree, key: jax.Array, param_dtype=None) -> PyTree:
+    """Materialize parameters from a spec pytree (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, max(len(leaves), 1))
+    out = []
+    for spec, k in zip(leaves, keys):
+        dtype = param_dtype or spec.dtype
+        if spec.init == "zeros":
+            v = jnp.zeros(spec.shape, dtype)
+        elif spec.init == "ones":
+            v = jnp.ones(spec.shape, dtype)
+        else:
+            fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+            scale = 1.0 / np.sqrt(max(fan_in, 1))
+            v = (jax.random.normal(k, spec.shape, jnp.float32) * scale).astype(dtype)
+        out.append(v)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_from_specs(specs: PyTree, param_dtype=None) -> PyTree:
+    """ShapeDtypeStruct stand-ins (for .lower() without allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, param_dtype or s.dtype),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def logical_axes(specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def count_params(specs: PyTree) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec)))

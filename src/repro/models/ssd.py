@@ -1,0 +1,194 @@
+"""Mamba-2 SSD block (state-space duality, arXiv:2405.21060).
+
+Block: in_proj -> [z | x | B | C | dt], causal conv over (x,B,C), SSD core,
+gated RMSNorm, out_proj.  The SSD core uses the paper's chunked algorithm:
+quadratic attention-like intra-chunk term + linear inter-chunk state
+recurrence — this is the "duality" and is the TPU-friendly formulation
+(dense matmuls inside chunks feed the MXU; the cross-chunk scan is tiny).
+
+Decode is the O(1) recurrent form on a per-head state [H, P, N].
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import norm_spec, rms_norm
+from .spec import ParamSpec
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return d_inner, n_heads, s.d_state, s.head_dim
+
+
+def ssd_specs(cfg: ArchConfig, stacked: Optional[int]) -> dict:
+    s = cfg.ssm
+    d_inner, nh, n, p_dim = _dims(cfg)
+    pre_s = (stacked,) if stacked else ()
+    pre_a = ("layers",) if stacked else ()
+    d = cfg.d_model
+    conv_dim = d_inner + 2 * n
+    return {
+        "w_in": ParamSpec(pre_s + (d, 2 * d_inner + 2 * n + nh),
+                          pre_a + ("embed", "mlp")),
+        "conv_w": ParamSpec(pre_s + (s.d_conv, conv_dim), pre_a + (None, "mlp")),
+        "a_log": ParamSpec(pre_s + (nh,), pre_a + (None,), init="ones"),
+        "dt_bias": ParamSpec(pre_s + (nh,), pre_a + (None,), init="zeros"),
+        "d_skip": ParamSpec(pre_s + (nh,), pre_a + (None,), init="ones"),
+        "out_norm": norm_spec(d_inner, pre_a, pre_s),
+        "w_out": ParamSpec(pre_s + (d_inner, d), pre_a + ("mlp", "embed")),
+        "norm": norm_spec(d, pre_a, pre_s),
+    }
+
+
+def _split_proj(p, h, cfg):
+    d_inner, nh, n, _ = _dims(cfg)
+    zxbcdt = jnp.einsum("...d,de->...e", h, p["w_in"])
+    return jnp.split(zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + n,
+                              2 * d_inner + 2 * n], axis=-1)
+
+
+def _conv(p, u, state=None):
+    k = p["conv_w"].shape[0]
+    pad = state if state is not None else jnp.zeros(
+        u.shape[:-2] + (k - 1, u.shape[-1]), u.dtype)
+    full = jnp.concatenate([pad, u], axis=-2)
+    out = sum(full[..., i:i + u.shape[-2], :] * p["conv_w"][i] for i in range(k))
+    return jax.nn.silu(out), full[..., -(k - 1):, :]
+
+
+def _segsum(a: jnp.ndarray) -> jnp.ndarray:
+    """a: [..., q, h] -> [..., h, q, q] with S[i,j] = sum_{j<k<=i} a_k (lower-tri)."""
+    q = a.shape[-2]
+    a_t = jnp.moveaxis(a, -1, -2)                      # [..., h, q]
+    cum = jnp.cumsum(a_t, axis=-1)                     # [..., h, q]
+    diff = cum[..., :, None] - cum[..., None, :]       # [..., h, q, q]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_core(x: jnp.ndarray, a_log: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+             chunk: int, h0: Optional[jnp.ndarray] = None
+             ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD. x:[b,s,h,p] (dt-scaled), a_log:[b,s,h] (negative),
+    B,C:[b,s,n] shared across heads. Returns (y, final_state [b,h,p,n])."""
+    b, s, nh, pd = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a_log = jnp.pad(a_log, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, nh, pd)
+    ac = a_log.reshape(b, nc, chunk, nh).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+    xf = xc.astype(jnp.float32)
+
+    # intra-chunk (quadratic, attention-like)
+    L = jnp.exp(_segsum(ac))                                   # [b,c,h,q,q]
+    y_diag = jnp.einsum("bcqn,bckn,bchqk,bckhp->bcqhp", Cc, Bc, L, xf)
+
+    # per-chunk final states
+    cum = jnp.cumsum(ac, axis=2)                               # [b,c,q,h]
+    decay_states = jnp.exp(cum[:, :, -1:, :] - cum)            # [b,c,q,h]
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchpn", Bc, decay_states, xf)
+
+    # inter-chunk recurrence (associative scan over chunks)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # [b,c,h]
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, pd, n), jnp.float32)
+
+    def combine(c1, c2):
+        d1, s1 = c1
+        d2, s2 = c2
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    d_s, h_s = jax.lax.associative_scan(combine, (chunk_decay, states), axis=1)
+    h_s = h_s + d_s[..., None, None] * h0[:, None]             # include h0
+    h_prev = jnp.concatenate([h0[:, None], h_s[:, :-1]], axis=1)  # [b,c,h,p,n]
+
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, jnp.exp(cum), h_prev)
+    y = (y_diag + y_off).reshape(b, nc * chunk, nh, pd)[:, :s]
+    return y, h_s[:, -1]
+
+
+def ssd_train(p: dict, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    out, _ = _ssd_forward(p, x, cfg, conv_state=None, h0=None)
+    return out
+
+
+def ssd_cache_spec(cfg: ArchConfig, batch: int, stacked: Optional[int],
+                   dtype=jnp.float32) -> dict:
+    s = cfg.ssm
+    d_inner, nh, n, pd = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    pre_s = (stacked,) if stacked else ()
+    pre_a = ("layers",) if stacked else ()
+    return {
+        "h": ParamSpec(pre_s + (batch, nh, pd, n),
+                       pre_a + ("act_batch", None, None, None), dtype, "zeros"),
+        "conv": ParamSpec(pre_s + (batch, s.d_conv - 1, conv_dim),
+                          pre_a + ("act_batch", None, None), dtype, "zeros"),
+    }
+
+
+def _ssd_forward(p, x, cfg, conv_state, h0):
+    s_cfg = cfg.ssm
+    d_inner, nh, n, pd = _dims(cfg)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    z, xs, B, C, dt = _split_proj(p, h, cfg)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)
+    conv_out, new_conv = _conv(p, conv_in, conv_state)
+    xs, B, C = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [b,s,h]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                  # [h] negative
+    a_log = dt * a                                                # [b,s,h]
+    xh = xs.reshape(xs.shape[:-1] + (nh, pd))
+    x_dt = xh.astype(jnp.float32) * dt[..., None]
+    y, h_final = ssd_core(x_dt, a_log, B, C, s_cfg.chunk, h0)
+    y = y + p["d_skip"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(y.shape[:-2] + (d_inner,)).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = x + jnp.einsum("...e,ed->...d", y, p["w_out"])
+    return out, {"h": h_final, "conv": new_conv}
+
+
+def ssd_prefill(p: dict, x: jnp.ndarray, cfg: ArchConfig, cache: dict
+                ) -> tuple[jnp.ndarray, dict]:
+    out, new_cache = _ssd_forward(p, x, cfg, conv_state=None, h0=None)
+    return out, {"h": new_cache["h"].astype(cache["h"].dtype),
+                 "conv": new_cache["conv"].astype(cache["conv"].dtype)}
+
+
+def ssd_decode(p: dict, x: jnp.ndarray, cfg: ArchConfig, cache: dict
+               ) -> tuple[jnp.ndarray, dict]:
+    """One-step recurrence. x: [B,1,D]; state h: [B,H,P,N]."""
+    d_inner, nh, n, pd = _dims(cfg)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    z, xs, B, C, dt = _split_proj(p, h, cfg)
+    conv_in = jnp.concatenate([xs, B, C], axis=-1)
+    conv_out, new_conv = _conv(p, conv_in, cache["conv"].astype(conv_in.dtype))
+    xs, B, C = jnp.split(conv_out, [d_inner, d_inner + n], axis=-1)
+    dt = jax.nn.softplus(dt[..., 0, :].astype(jnp.float32) + p["dt_bias"])  # [b,h]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)                                      # [b,h]
+    xh = xs[..., 0, :].reshape(x.shape[0], nh, pd).astype(jnp.float32)
+    Bf = B[..., 0, :].astype(jnp.float32)                        # [b,n]
+    Cf = C[..., 0, :].astype(jnp.float32)
+    h_new = decay[..., None, None] * cache["h"].astype(jnp.float32) \
+        + jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bf)
+    y = jnp.einsum("bn,bhpn->bhp", Cf, h_new) + p["d_skip"][:, None] * xh
+    y = y.reshape(x.shape[0], 1, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"], cfg.norm_eps)
+    out = x + jnp.einsum("...e,ed->...d", y, p["w_out"])
+    return out, {"h": h_new.astype(cache["h"].dtype),
+                 "conv": new_conv.astype(cache["conv"].dtype)}

@@ -1,0 +1,316 @@
+"""Model assembly: scan-over-units decoder stacks for every arch family.
+
+A model is a repeating ``block_pattern`` of layer kinds scanned ``n_units``
+times (keeping HLO size flat in depth), plus optional non-repeating ``tail``
+layers, an optional encoder stack (audio enc-dec), and optional cross-attn
+memory (VLM image embeddings / encoder output).
+
+Layer kinds:
+  attn      GQA self-attention + SwiGLU MLP
+  mla       multi-head latent attention + SwiGLU MLP
+  attn_moe  GQA self-attention + MoE MLP
+  mla_moe   MLA + MoE MLP
+  rec       RG-LRU recurrent block + SwiGLU MLP
+  ssd       Mamba-2 SSD block (no separate MLP)
+  xattn     cross-attention (gated) + SwiGLU MLP
+
+Three execution modes: ``train`` (full seq, causal), ``prefill`` (train +
+cache fill), ``decode`` (one token against a cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as att
+from . import mla as mla_mod
+from . import moe as moe_mod
+from . import rglru as rg_mod
+from . import ssd as ssd_mod
+from .config import ArchConfig
+from .layers import embed_apply, embed_specs, mlp_apply, mlp_specs, unembed_apply
+from .spec import ParamSpec  # noqa: F401
+
+PyTree = Any
+
+MIXER = {"attn": "attn", "attn_moe": "attn", "mla": "mla", "mla_moe": "mla",
+         "rec": "rec", "ssd": "ssd", "xattn": "xattn", "enc_attn": "enc_attn"}
+FFN = {"attn": "mlp", "attn_moe": "moe", "mla": "mlp", "mla_moe": "moe",
+       "rec": "mlp", "ssd": None, "xattn": "mlp", "enc_attn": "mlp"}
+
+
+# ------------------------------------------------------------------- specs
+def _layer_specs(kind: str, cfg: ArchConfig, stacked: Optional[int]) -> dict:
+    mixer, ffn = MIXER[kind], FFN[kind]
+    out = {}
+    if mixer in ("attn", "enc_attn"):
+        out["mixer"] = att.attn_specs(cfg, stacked)
+    elif mixer == "mla":
+        out["mixer"] = mla_mod.mla_specs(cfg, stacked)
+    elif mixer == "rec":
+        out["mixer"] = rg_mod.rglru_specs(cfg, stacked)
+    elif mixer == "ssd":
+        out["mixer"] = ssd_mod.ssd_specs(cfg, stacked)
+    elif mixer == "xattn":
+        out["mixer"] = att.attn_specs(cfg, stacked, cross=True)
+    if ffn == "mlp":
+        out["ffn"] = mlp_specs(cfg, stacked)
+    elif ffn == "moe":
+        out["ffn"] = moe_mod.moe_specs(cfg, stacked)
+    return out
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    specs: dict = {"embed": embed_specs(cfg)}
+    if cfg.n_units:
+        specs["unit"] = {str(i): _layer_specs(k, cfg, cfg.n_units)
+                         for i, k in enumerate(cfg.block_pattern)}
+    if cfg.tail_pattern:
+        specs["tail"] = {str(i): _layer_specs(k, cfg, None)
+                         for i, k in enumerate(cfg.tail_pattern)}
+    if cfg.encoder:
+        specs["encoder"] = {
+            "unit": {"0": _layer_specs("enc_attn", cfg, cfg.encoder.n_layers)}}
+    return specs
+
+
+def _layer_cache_spec(kind: str, cfg: ArchConfig, batch: int, max_len: int,
+                      stacked: Optional[int], dtype) -> Optional[dict]:
+    mixer = MIXER[kind]
+    if mixer == "attn":
+        return att.init_cache_spec(cfg, batch, max_len, stacked, dtype)
+    if mixer == "mla":
+        return mla_mod.mla_cache_spec(cfg, batch, max_len, stacked, dtype)
+    if mixer == "rec":
+        return rg_mod.rglru_cache_spec(cfg, batch, stacked)
+    if mixer == "ssd":
+        return ssd_mod.ssd_cache_spec(cfg, batch, stacked)
+    return None  # xattn: static memory, no cache
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> dict:
+    """KV/state cache specs. Recurrent states stay f32 (numerically load-
+    bearing); KV caches use ``dtype`` (bf16 in production, f32 in tests)."""
+    out: dict = {}
+    if cfg.n_units:
+        out["unit"] = {
+            str(i): cs for i, k in enumerate(cfg.block_pattern)
+            if (cs := _layer_cache_spec(k, cfg, batch, max_len, cfg.n_units,
+                                        dtype)) is not None}
+    if cfg.tail_pattern:
+        out["tail"] = {
+            str(i): cs for i, k in enumerate(cfg.tail_pattern)
+            if (cs := _layer_cache_spec(k, cfg, batch, max_len, None, dtype))
+            is not None}
+    return out
+
+
+# ------------------------------------------------------------------- apply
+def _apply_layer(kind: str, p: dict, x: jnp.ndarray, cfg: ArchConfig, *,
+                 mode: str, cache: Optional[dict], pos, memory, aux):
+    """One layer in the given mode. Returns (x, new_cache, aux)."""
+    mixer, ffn = MIXER[kind], FFN[kind]
+    new_cache = None
+    if mixer in ("attn", "enc_attn"):
+        causal = mixer == "attn"
+        if mode == "train" or mixer == "enc_attn":
+            x = att.attn_train(p["mixer"], x, cfg, causal=causal)
+        elif mode == "prefill":
+            x, new_cache = att.attn_prefill(p["mixer"], x, cfg, cache)
+        else:
+            x, new_cache = att.attn_decode(p["mixer"], x, cfg, cache, pos)
+    elif mixer == "mla":
+        if mode == "train":
+            x = mla_mod.mla_train(p["mixer"], x, cfg)
+        elif mode == "prefill":
+            x, new_cache = mla_mod.mla_prefill(p["mixer"], x, cfg, cache)
+        else:
+            x, new_cache = mla_mod.mla_decode(p["mixer"], x, cfg, cache, pos)
+    elif mixer == "rec":
+        if mode == "train":
+            x = rg_mod.rglru_train(p["mixer"], x, cfg)
+        elif mode == "prefill":
+            x, new_cache = rg_mod.rglru_prefill(p["mixer"], x, cfg, cache)
+        else:
+            x, new_cache = rg_mod.rglru_decode(p["mixer"], x, cfg, cache)
+    elif mixer == "ssd":
+        if mode == "train":
+            x = ssd_mod.ssd_train(p["mixer"], x, cfg)
+        elif mode == "prefill":
+            x, new_cache = ssd_mod.ssd_prefill(p["mixer"], x, cfg, cache)
+        else:
+            x, new_cache = ssd_mod.ssd_decode(p["mixer"], x, cfg, cache)
+    elif mixer == "xattn":
+        x = att.xattn_train(p["mixer"], x, memory, cfg)
+
+    if ffn == "mlp":
+        x = mlp_apply(p["ffn"], x, cfg.norm_eps)
+    elif ffn == "moe":
+        x, moe_aux = moe_mod.moe_apply(p["ffn"], x, cfg)
+        aux = aux + moe_aux
+    return x, new_cache, aux
+
+
+def _run_stack(params: dict, x: jnp.ndarray, cfg: ArchConfig, pattern,
+               *, mode: str, caches: Optional[dict], pos, memory,
+               remat: bool, encoder: bool = False, act_spec=None):
+    """Scan the repeating units, then the tail. Returns (x, new_caches, aux)."""
+    aux0 = jnp.zeros((), jnp.float32)
+    unit_params = params.get("unit")
+    new_caches: dict = {}
+
+    def body(carry, xs):
+        x, aux = carry
+        if act_spec is not None:
+            # sequence-parallel residuals: the scan carry (the only
+            # activation remat keeps alive per layer) is sharded over the
+            # model axis instead of replicated within each TP group
+            x = jax.lax.with_sharding_constraint(x, act_spec)
+        up, uc = xs
+        ncs = {}
+        for i, kind in enumerate(pattern):
+            c = uc.get(str(i)) if uc else None
+            x, nc, aux = _apply_layer(kind, up[str(i)], x, cfg, mode=mode,
+                                      cache=c, pos=pos, memory=memory, aux=aux)
+            if act_spec is not None:
+                # re-assert after every residual add: the partial-sum
+                # attention/MLP outputs then lower to reduce-scatter
+                # instead of all-reduce + local slice (§Perf A1)
+                x = jax.lax.with_sharding_constraint(x, act_spec)
+            if nc is not None:
+                ncs[str(i)] = nc
+        return (x, aux), ncs
+
+    body_fn = jax.checkpoint(body) if remat else body
+    if unit_params is not None:
+        uc = (caches or {}).get("unit", {})
+        (x, aux0), new_unit_caches = jax.lax.scan(
+            body_fn, (x, aux0), (unit_params, uc))
+        if new_unit_caches:
+            new_caches["unit"] = new_unit_caches
+
+    tail = params.get("tail")
+    if tail is not None and not encoder:
+        tcs = {}
+        tc = (caches or {}).get("tail", {})
+        for i, kind in enumerate(cfg.tail_pattern):
+            c = tc.get(str(i))
+            x, nc, aux0 = _apply_layer(kind, tail[str(i)], x, cfg, mode=mode,
+                                       cache=c, pos=pos, memory=memory,
+                                       aux=aux0)
+            if nc is not None:
+                tcs[str(i)] = nc
+        if tcs:
+            new_caches["tail"] = tcs
+    return x, new_caches, aux0
+
+
+def _encode(params: dict, memory_embeds: jnp.ndarray, cfg: ArchConfig,
+            remat: bool) -> jnp.ndarray:
+    """Run the encoder stack over stubbed frontend embeddings."""
+    x, _, _ = _run_stack(params["encoder"], memory_embeds, cfg,
+                         ("enc_attn",), mode="train", caches=None, pos=None,
+                         memory=None, remat=remat, encoder=False)
+    return x
+
+
+def _memory(params: dict, cfg: ArchConfig, memory_embeds, remat: bool):
+    if memory_embeds is None:
+        return None
+    if cfg.encoder:
+        return _encode(params, memory_embeds, cfg, remat)
+    return memory_embeds  # vlm: projector output fed directly
+
+
+# ------------------------------------------------------------- public API
+def forward_train(params: dict, tokens: jnp.ndarray, cfg: ArchConfig, *,
+                  memory_embeds: Optional[jnp.ndarray] = None,
+                  remat: bool = False, act_spec=None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens [B, S] -> (logits [B, S, V], aux loss)."""
+    dt = cfg.jnp_param_dtype
+    x = embed_apply(params["embed"], tokens, dt)
+    mem = _memory(params, cfg, memory_embeds, remat)
+    x, _, aux = _run_stack(params, x, cfg, cfg.block_pattern, mode="train",
+                           caches=None, pos=None, memory=mem, remat=remat,
+                           act_spec=act_spec)
+    return unembed_apply(params["embed"], x, cfg), aux
+
+
+LOSS_CHUNK = 512   # seq-chunked cross-entropy threshold/size
+
+
+def _nll(params, x, labels, cfg):
+    logits = unembed_apply(params["embed"], x, cfg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+
+
+def loss_fn(params: dict, tokens: jnp.ndarray, labels: jnp.ndarray,
+            cfg: ArchConfig, *, memory_embeds=None, remat: bool = False,
+            act_spec=None) -> jnp.ndarray:
+    dt = cfg.jnp_param_dtype
+    x = embed_apply(params["embed"], tokens, dt)
+    mem = _memory(params, cfg, memory_embeds, remat)
+    x, _, aux = _run_stack(params, x, cfg, cfg.block_pattern, mode="train",
+                           caches=None, pos=None, memory=mem, remat=remat,
+                           act_spec=act_spec)
+    valid = (labels >= 0).astype(jnp.float32)
+    b, s = labels.shape
+    if s <= LOSS_CHUNK or s % LOSS_CHUNK:
+        nll = _nll(params, x, labels, cfg)
+    else:
+        # chunked cross-entropy: the f32 [B, S, V] logits/logp never
+        # materialize — each remat'd chunk computes its unembed + nll and
+        # is recomputed in the backward pass
+        nc = s // LOSS_CHUNK
+        xc = jnp.moveaxis(x.reshape(b, nc, LOSS_CHUNK, -1), 1, 0)
+        lc = jnp.moveaxis(labels.reshape(b, nc, LOSS_CHUNK), 1, 0)
+
+        @jax.checkpoint
+        def chunk(args):
+            xi, li = args
+            return _nll(params, xi, li, cfg)
+
+        nll = jnp.moveaxis(jax.lax.map(chunk, (xc, lc)), 0, 1)
+        nll = nll.reshape(b, s)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0) + aux
+
+
+def prefill(params: dict, tokens: jnp.ndarray, cfg: ArchConfig, caches: dict,
+            *, memory_embeds=None, remat: bool = False):
+    """Returns (logits of last position [B, V], filled caches)."""
+    dt = cfg.jnp_param_dtype
+    x = embed_apply(params["embed"], tokens, dt)
+    mem = _memory(params, cfg, memory_embeds, remat)
+    x, new_caches, _ = _run_stack(params, x, cfg, cfg.block_pattern,
+                                  mode="prefill", caches=caches, pos=None,
+                                  memory=mem, remat=remat)
+    logits = unembed_apply(params["embed"], x[..., -1:, :], cfg)
+    return logits[..., 0, :], new_caches
+
+
+def encode(params: dict, memory_embeds: jnp.ndarray, cfg: ArchConfig,
+           remat: bool = False) -> jnp.ndarray:
+    """Run the encoder once (enc-dec serving runs this at prefill time)."""
+    return _memory(params, cfg, memory_embeds, remat)
+
+
+def decode_step(params: dict, token: jnp.ndarray, pos: jnp.ndarray,
+                cfg: ArchConfig, caches: dict, *, memory=None):
+    """token [B, 1], pos scalar int32 -> (logits [B, V], new caches).
+
+    ``memory`` is *pre-encoded* cross-attention memory (the encoder / vision
+    projector runs once at prefill, not per decode step).
+    """
+    dt = cfg.jnp_param_dtype
+    x = embed_apply(params["embed"], token, dt)
+    x, new_caches, _ = _run_stack(params, x, cfg, cfg.block_pattern,
+                                  mode="decode", caches=caches, pos=pos,
+                                  memory=memory, remat=False)
+    logits = unembed_apply(params["embed"], x, cfg)
+    return logits[..., 0, :], new_caches

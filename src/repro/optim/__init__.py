@@ -1,0 +1,5 @@
+from .sgd import (sgd_init, sgd_step, adam_init, adam_step, paper_lr,
+                  OptState)
+
+__all__ = ["sgd_init", "sgd_step", "adam_init", "adam_step", "paper_lr",
+           "OptState"]

@@ -1,0 +1,73 @@
+"""Optimizers + the paper's decaying learning-rate schedule.
+
+The paper assumes a dynamic learning rate  eta^{t,k} = 1 / (eta0 + d*(t*K+k))
+(Sec. 4.1) — ``paper_lr`` implements exactly that, where ``step = t*K + k``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OptState:
+    mu: PyTree                  # momentum (sgd) / first moment (adam)
+    nu: Optional[PyTree]        # second moment (adam) or None
+    count: jnp.ndarray
+
+
+def paper_lr(step: jnp.ndarray, eta0: float = 1e-3, decay: float = 0.90,
+             k_total: Optional[int] = None) -> jnp.ndarray:
+    """eta^{t,k} = 1 / (1/eta0 + d*step): the paper's form 1/(eta0+d*(tK+k))
+    re-parameterized so eta(0) == eta0 (the paper's 'initial learning rate
+    0.001' with decay d)."""
+    del k_total
+    return 1.0 / (1.0 / eta0 + decay * step.astype(jnp.float32))
+
+
+def sgd_init(params: PyTree) -> OptState:
+    return OptState(mu=jax.tree.map(jnp.zeros_like, params), nu=None,
+                    count=jnp.zeros((), jnp.int32))
+
+
+def sgd_step(params: PyTree, grads: PyTree, state: OptState, lr: jnp.ndarray,
+             momentum: float = 0.0) -> tuple[PyTree, OptState]:
+    if momentum:
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+        upd = mu
+    else:
+        mu, upd = state.mu, grads
+    new = jax.tree.map(
+        lambda p, u: (p.astype(jnp.float32) - lr * u.astype(jnp.float32))
+        .astype(p.dtype), params, upd)
+    return new, OptState(mu=mu, nu=None, count=state.count + 1)
+
+
+def adam_init(params: PyTree) -> OptState:
+    z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(mu=z, nu=jax.tree.map(jnp.zeros_like, z),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def adam_step(params: PyTree, grads: PyTree, state: OptState, lr: jnp.ndarray,
+              b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8
+              ) -> tuple[PyTree, OptState]:
+    c = state.count + 1
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                      state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2)
+                      * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+    bc1 = 1 - b1 ** c.astype(jnp.float32)
+    bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+    def upd(p, m, v):
+        step = lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    return jax.tree.map(upd, params, mu, nu), OptState(mu=mu, nu=nu, count=c)

@@ -1,0 +1,5 @@
+import os
+
+# Tests see the real single CPU device (the dry-run sets its own XLA_FLAGS
+# in-process before importing jax; never set device-count flags here).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,161 @@
+"""Baselines, straggler schedules, Raft blockchain, latency optimization."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BoundParams, LatencyParams, RaftChain, baselines,
+                        edge_window, omega_bound, optimize_k, straggler,
+                        total_latency)
+
+
+# ------------------------------------------------------------- baselines
+def test_t_fedavg_drops_stragglers():
+    w = {"p": jnp.stack([jnp.ones(3), 10 * jnp.ones(3), 2 * jnp.ones(3)])}
+    agg = baselines.t_fedavg(w, jnp.array([True, False, True]))
+    np.testing.assert_allclose(np.asarray(agg["p"]), 1.5)
+
+
+def test_d_fedavg_reuses_last_weights():
+    w1 = {"p": jnp.stack([jnp.ones(2), 4 * jnp.ones(2)])}
+    last = {"p": jnp.zeros((2, 2))}
+    agg1, last = baselines.d_fedavg(w1, jnp.array([True, True]), last)
+    np.testing.assert_allclose(np.asarray(agg1["p"]), 2.5)
+    w2 = {"p": jnp.stack([2 * jnp.ones(2), 99 * jnp.ones(2)])}
+    agg2, last = baselines.d_fedavg(w2, jnp.array([True, False]), last)
+    np.testing.assert_allclose(np.asarray(agg2["p"]), 3.0)  # (2 + 4)/2
+    np.testing.assert_allclose(np.asarray(last["p"][1]), 4.0)
+
+
+def test_fedavg_weighted():
+    w = {"p": jnp.stack([jnp.ones(2), 4 * jnp.ones(2)])}
+    agg = baselines.fedavg(w, jnp.array([3.0, 1.0]))
+    np.testing.assert_allclose(np.asarray(agg["p"]), 1.75)
+
+
+# ------------------------------------------------------------ stragglers
+def test_permanent_schedule():
+    m = straggler.permanent(10, 6, 2, stop_round=4, seed=0)
+    assert m[:4].all()
+    assert (~m[4:]).sum() == 2 * 6
+    gone = np.flatnonzero(~m[5])
+    assert len(gone) == 2
+
+
+def test_temporary_returns_next_round():
+    m = straggler.temporary(50, 5, 2, miss_prob=0.7, seed=1)
+    miss_r, miss_i = np.nonzero(~m)
+    for r, i in zip(miss_r, miss_i):
+        if r + 1 < 50:
+            assert m[r + 1, i], "temporary straggler must return next round"
+    assert m[:2].all(), "cold boot rounds are never missed"
+
+
+@settings(max_examples=10, deadline=None)
+@given(frac=st.sampled_from([0.0, 0.2, 0.4]), n=st.integers(4, 10))
+def test_from_fraction_counts(frac, n):
+    m = straggler.from_fraction(30, n, frac, kind="permanent", stop_round=3)
+    assert (~m[10]).sum() == int(round(frac * n))
+
+
+# ------------------------------------------------------------ blockchain
+def test_raft_election_and_commit():
+    chain = RaftChain(5, seed=0)
+    leader, t_elect = chain.elect_leader()
+    assert 0 <= leader < 5 and t_elect > 0
+    blk, t_commit = chain.commit_block("edges", "global")
+    assert blk.index == 1 and blk.leader == leader
+    assert chain.validate()
+
+
+def test_raft_leader_failover():
+    chain = RaftChain(5, seed=0)
+    leader, _ = chain.elect_leader()
+    chain.fail_node(leader)
+    blk, _ = chain.commit_block("e", "g")   # triggers re-election
+    assert blk.leader != leader
+    assert chain.validate()
+
+
+def test_raft_no_majority_raises():
+    chain = RaftChain(3, seed=0)
+    chain.elect_leader()
+    chain.fail_node(0)
+    chain.fail_node(1)
+    with pytest.raises(RuntimeError):
+        chain.commit_block("e", "g")
+
+
+def test_chain_tamper_detection():
+    chain = RaftChain(3, seed=0)
+    chain.elect_leader()
+    chain.commit_block("e1", "g1")
+    chain.commit_block("e2", "g2")
+    chain.blocks[1].payload_hash = "tampered"
+    assert not chain.validate()
+
+
+def test_consensus_latency_positive():
+    chain = RaftChain(5)
+    assert 0 < chain.consensus_latency() < 1.0
+
+
+# --------------------------------------------------------------- latency
+def test_total_latency_linear_in_k():
+    p = LatencyParams()
+    l1, l2 = total_latency(1, p), total_latency(2, p)
+    l3 = total_latency(3, p)
+    assert abs((l3 - l2) - (l2 - l1)) < 1e-9
+    assert l2 > l1
+
+
+def test_omega_decreases_in_k():
+    """Corollary 1: more edge rounds -> better bound."""
+    bp = BoundParams()
+    oms = [omega_bound(k, bp) for k in range(1, 30)]
+    finite = [o for o in oms if np.isfinite(o)]
+    assert len(finite) > 5
+    assert all(a >= b - 1e-9 for a, b in zip(finite, finite[1:]))
+
+
+def test_omega_increases_with_stragglers():
+    """Corollary 2: more stragglers -> worse bound."""
+    lo = omega_bound(8, BoundParams(s_frac=0.1))
+    hi = omega_bound(8, BoundParams(s_frac=0.5))
+    assert hi > lo
+
+
+def test_optimize_k_respects_constraints():
+    bp = BoundParams()
+    p = LatencyParams()
+    res = optimize_k(p, lambda k: omega_bound(k, bp), omega_bar=25.0,
+                     consensus_latency=0.5)
+    assert res is not None
+    k = res.k_star
+    assert omega_bound(k, bp) <= 25.0
+    assert 0.5 <= edge_window(k, p)
+    # K* is the cheapest feasible K
+    for kk in range(1, k):
+        feasible = (omega_bound(kk, bp) <= 25.0
+                    and 0.5 <= edge_window(kk, p))
+        assert not feasible or total_latency(kk, p) >= res.latency
+
+
+def test_optimize_k_infeasible_returns_none():
+    bp = BoundParams()
+    p = LatencyParams()
+    res = optimize_k(p, lambda k: omega_bound(k, bp), omega_bar=1e-9,
+                     consensus_latency=0.01, k_max=8)
+    assert res is None
+
+
+def test_k_star_grows_with_consensus_latency():
+    """Fig. 7b: longer consensus -> larger K* (C2 needs a wider window)."""
+    bp = BoundParams()
+    p = LatencyParams()
+    ks = []
+    for lbc in (0.5, 3.0, 8.0):
+        res = optimize_k(p, lambda k: omega_bound(k, bp), omega_bar=25.0,
+                         consensus_latency=lbc)
+        ks.append(res.k_star if res else np.inf)
+    assert ks == sorted(ks)

@@ -1,0 +1,73 @@
+"""Unit tests for the dry-run's HLO static analysis (while-aware census).
+
+These run without the 512-device environment — they exercise the pure
+text-parsing layer on synthetic HLO, so census regressions are caught by
+the normal suite rather than only by a 40-minute sweep.
+"""
+import textwrap
+
+from repro.launch.dryrun import (_computation_multipliers,
+                                 _split_computations, _tensor_bytes,
+                                 collective_census)
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step
+
+    %cond.1 (arg.1: (s32[], f32[8,128])) -> pred[] {
+      %p = (s32[], f32[8,128]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %c = s32[] constant(30)
+      ROOT %cmp = pred[] compare(%i, %c), direction=LT
+    }
+
+    %body.1 (arg.2: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+      %p2 = (s32[], f32[8,128]) parameter(0)
+      %x = f32[8,128] get-tuple-element(%p2), index=1
+      %ar = f32[8,128] all-reduce(%x), replica_groups={}, to_apply=%add.1
+      %i2 = s32[] get-tuple-element(%p2), index=0
+      ROOT %t = (s32[], f32[8,128]) tuple(%i2, %ar)
+    }
+
+    %add.1 (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %s = f32[] add(%a, %b)
+    }
+
+    ENTRY %main.1 (arg.0: f32[8,128]) -> f32[8,128] {
+      %a0 = f32[8,128] parameter(0)
+      %ag = f32[8,128] all-gather(%a0), replica_groups={}, dimensions={0}
+      %init = (s32[], f32[8,128]) tuple(%zero, %ag)
+      %w = (s32[], f32[8,128]) while(%init), condition=%cond.1, body=%body.1
+      ROOT %out = f32[8,128] get-tuple-element(%w), index=1
+    }
+    """)
+
+
+def test_tensor_bytes():
+    assert _tensor_bytes("f32[8,128]") == 8 * 128 * 4
+    assert _tensor_bytes("bf16[2,4]") == 2 * 4 * 2
+    assert _tensor_bytes("(f32[4], bf16[4])") == 16 + 8
+    assert _tensor_bytes("pred[]") == 1
+
+
+def test_split_computations():
+    comps = _split_computations(HLO)
+    assert set(comps) == {"cond.1", "body.1", "add.1", "main.1"}
+    assert "all-reduce" in comps["body.1"]
+    assert "all-gather" in comps["main.1"]
+
+
+def test_while_multiplier_from_trip_count():
+    comps = _split_computations(HLO)
+    mult = _computation_multipliers(comps)
+    assert mult["main.1"] == 1.0
+    assert mult["body.1"] == 30.0      # trip count from the cond constant
+
+
+def test_census_weights_loop_bodies():
+    census = collective_census(HLO)
+    leaf = 8 * 128 * 4
+    assert census["all-gather"]["bytes"] == leaf          # entry: x1
+    assert census["all-reduce"]["bytes"] == 30 * leaf     # body: x30
+    assert census["total_bytes"] == 31 * leaf

@@ -1,0 +1,176 @@
+"""Unit + property tests for the paper's HieAvg aggregation (Sec. 3)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hieavg
+
+
+def stacked(n, shapes=((3, 4), (5,)), seed=0, scale=1.0):
+    ks = jax.random.split(jax.random.key(seed), len(shapes))
+    return {f"p{i}": jax.random.normal(k, (n,) + s) * scale
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+def test_cold_edge_aggregate_is_mean():
+    w = stacked(5)
+    agg = hieavg.edge_aggregate_cold(w)
+    for k in w:
+        np.testing.assert_allclose(agg[k], jnp.mean(w[k], axis=0), rtol=1e-6)
+
+
+def test_cold_global_aggregate_weights_by_j():
+    w = stacked(3)
+    j = jnp.array([1.0, 2.0, 3.0])
+    agg = hieavg.global_aggregate_cold(w, j)
+    for k in w:
+        expect = (w[k][0] * 1 + w[k][1] * 2 + w[k][2] * 3) / 6.0
+        np.testing.assert_allclose(agg[k], expect, rtol=1e-5)
+
+
+def test_full_mask_equals_plain_mean():
+    """With no stragglers eq. (4) reduces to eq. (2)."""
+    w = stacked(4)
+    hist = hieavg.init_history(w)
+    mask = jnp.ones(4, bool)
+    agg, _ = hieavg.edge_aggregate(w, mask, hist)
+    for k in w:
+        np.testing.assert_allclose(np.asarray(agg[k]),
+                                   np.asarray(jnp.mean(w[k], axis=0)),
+                                   rtol=1e-5)
+
+
+def test_straggler_estimate_uses_history():
+    """A straggler's slot is γ(w_prev + Δ̄), γ = γ0·λ^k' (eq. 4)."""
+    n = 2
+    w = stacked(n, seed=1)
+    prev = stacked(n, seed=2)
+    dmean = stacked(n, seed=3, scale=0.1)
+    hist = hieavg.History(prev_w=prev, delta_mean=dmean,
+                          n_obs=jnp.full((n,), 2.0),
+                          miss_count=jnp.zeros((n,)))
+    mask = jnp.array([True, False])
+    gamma0, lam = 0.9, 0.9
+    agg, _ = hieavg.edge_aggregate(w, mask, hist, gamma0=gamma0, lam=lam)
+    gamma = gamma0 * lam ** 1  # first miss: k' = 1
+    for k in w:
+        est = prev[k][1] + dmean[k][1]
+        expect = (w[k][0] + gamma * est) / n
+        np.testing.assert_allclose(np.asarray(agg[k]), np.asarray(expect),
+                                   rtol=1e-5)
+
+
+def test_decay_grows_with_consecutive_misses():
+    n = 2
+    w = stacked(n)
+    hist = hieavg.init_history(w)
+    mask = jnp.array([True, False])
+    h = hist
+    for expected_miss in (1.0, 2.0, 3.0):
+        _, h = hieavg.edge_aggregate(w, mask, h)
+        assert float(h.miss_count[1]) == expected_miss
+        assert float(h.miss_count[0]) == 0.0
+
+
+def test_returned_straggler_resets_miss_count():
+    w = stacked(3)
+    hist = hieavg.init_history(w)
+    _, hist = hieavg.edge_aggregate(w, jnp.array([True, False, True]), hist)
+    _, hist = hieavg.edge_aggregate(w, jnp.array([True, True, True]), hist)
+    assert float(hist.miss_count[1]) == 0.0
+
+
+def test_history_extrapolates_for_stragglers():
+    """prev_w of a straggler advances by Δ̄ (multi-round estimation)."""
+    n = 2
+    prev = stacked(n, seed=2)
+    dmean = stacked(n, seed=3, scale=0.5)
+    hist = hieavg.History(prev_w=prev, delta_mean=dmean,
+                          n_obs=jnp.full((n,), 1.0),
+                          miss_count=jnp.zeros((n,)))
+    w = stacked(n, seed=4)
+    new = hieavg.update_history(hist, w, jnp.array([True, False]))
+    for k in prev:
+        np.testing.assert_allclose(np.asarray(new.prev_w[k][1]),
+                                   np.asarray(prev[k][1] + dmean[k][1]),
+                                   rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(new.prev_w[k][0]),
+                                   np.asarray(w[k][0]), rtol=1e-6)
+
+
+def test_delta_mean_is_running_mean():
+    n = 1
+    w0 = {"p": jnp.zeros((n, 3))}
+    hist = hieavg.init_history(w0)
+    for t, val in enumerate((1.0, 3.0), start=1):
+        wt = {"p": jnp.full((n, 3), val)}
+        hist = hieavg.update_history(hist, wt, jnp.ones(n, bool))
+    # deltas: 1-0=1, 3-1=2 -> mean 1.5
+    np.testing.assert_allclose(np.asarray(hist.delta_mean["p"]), 1.5,
+                               rtol=1e-6)
+    assert float(hist.n_obs[0]) == 2.0
+
+
+def test_normalized_mode_is_affine():
+    """Normalized HieAvg keeps the aggregate an affine combination: with
+    identical participant weights the aggregate equals that weight."""
+    n = 4
+    w = {"p": jnp.ones((n, 7)) * 5.0}
+    hist = hieavg.History(prev_w=w, delta_mean={"p": jnp.zeros((n, 7))},
+                          n_obs=jnp.full((n,), 2.0),
+                          miss_count=jnp.zeros((n,)))
+    mask = jnp.array([True, False, True, False])
+    agg, _ = hieavg.edge_aggregate(w, mask, hist, normalize=True)
+    np.testing.assert_allclose(np.asarray(agg["p"]), 5.0, rtol=1e-5)
+
+
+def test_faithful_mode_shrinks_with_stragglers():
+    """The paper's literal eq. (4) divides by J: straggler decay shrinks the
+    aggregate norm — the failure mode EXPERIMENTS.md §Perf ablates."""
+    n = 4
+    w = {"p": jnp.ones((n, 7))}
+    hist = hieavg.History(prev_w=w, delta_mean={"p": jnp.zeros((n, 7))},
+                          n_obs=jnp.full((n,), 2.0),
+                          miss_count=jnp.full((n,), 10.0))  # long-missing
+    mask = jnp.array([True, False, True, False])
+    agg, _ = hieavg.edge_aggregate(w, mask, hist, normalize=False)
+    assert float(jnp.mean(agg["p"])) < 0.8  # < affine value 1.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 8), miss=st.integers(0, 5))
+def test_property_gamma_bounds(n, miss):
+    """0 < γ ≤ γ0 < 1 for any miss count — estimates are always shrunk."""
+    w = {"p": jnp.ones((n, 4))}
+    hist = hieavg.History(prev_w=w, delta_mean={"p": jnp.zeros((n, 4))},
+                          n_obs=jnp.full((n,), 1.0),
+                          miss_count=jnp.full((n,), float(miss)))
+    mask = jnp.zeros(n, bool).at[0].set(True)
+    agg, _ = hieavg.edge_aggregate(w, mask, hist, gamma0=0.9, lam=0.9)
+    # aggregate = (1 + (n-1)γ)/n with w=est=1
+    gamma = (float(jnp.mean(agg["p"])) * n - 1.0) / (n - 1)
+    assert 0.0 < gamma <= 0.9 + 1e-6
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 6), seed=st.integers(0, 100))
+def test_property_masked_equals_subset_mean_tfedavg_limit(n, seed):
+    """As γ→0 (λ→0 with k'≥1) normalized HieAvg converges to T_FedAvg."""
+    from repro.core.baselines import t_fedavg
+    w = stacked(n, seed=seed)
+    hist = hieavg.History(
+        prev_w=stacked(n, seed=seed + 1),
+        delta_mean={k: jnp.zeros_like(v) for k, v in
+                    stacked(n, seed=1).items()},
+        n_obs=jnp.full((n,), 2.0), miss_count=jnp.full((n,), 40.0))
+    mask = jnp.ones(n, bool).at[0].set(False)
+    agg, _ = hieavg.edge_aggregate(w, mask, hist, gamma0=0.9, lam=1e-3,
+                                   normalize=True)
+    ref = t_fedavg(w, mask)
+    for k in w:
+        np.testing.assert_allclose(np.asarray(agg[k]), np.asarray(ref[k]),
+                                   atol=1e-4)

@@ -1,0 +1,131 @@
+"""Per-architecture smoke tests + decode/train consistency.
+
+Every assigned architecture instantiates its REDUCED variant, runs one
+forward/train step on CPU, and asserts output shapes + no NaNs.  For every
+cached-decode family we additionally check that teacher-forced step-by-step
+decode reproduces the full-sequence forward logits — the strongest cheap
+correctness invariant for KV caches, rings, MLA latents and SSM states.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke
+from repro.launch.inputs import _memory_shape
+from repro.models import (cache_specs, count_params, forward_train,
+                          init_from_specs, loss_fn, param_specs, prefill,
+                          decode_step)
+
+B, S = 2, 24
+
+
+def setup_arch(arch):
+    cfg = get_smoke(arch)
+    params = init_from_specs(param_specs(cfg), jax.random.key(0))
+    toks = (jax.random.randint(jax.random.key(1), (B, S), 0, cfg.vocab)
+            .astype(jnp.int32))
+    ms = _memory_shape(cfg)
+    mem = (0.1 * jax.random.normal(jax.random.key(2), (B,) + ms,
+                                   jnp.float32) if ms else None)
+    return cfg, params, toks, mem
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg, params, toks, mem = setup_arch(arch)
+    logits, aux = forward_train(params, toks, cfg, memory_embeds=mem)
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())
+    assert not bool(jnp.isnan(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_one_train_step(arch):
+    cfg, params, toks, mem = setup_arch(arch)
+    loss, grads = jax.value_and_grad(loss_fn)(params, toks, toks, cfg,
+                                              memory_embeds=mem)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(not bool(jnp.isnan(g).any()) for g in flat)
+    new = jax.tree.map(lambda p, g: p - 1e-3 * g, params, grads)
+    loss2 = loss_fn(new, toks, toks, cfg, memory_embeds=mem)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    """Teacher-forced decode == full-sequence forward (per position)."""
+    cfg, params, toks, mem = setup_arch(arch)
+    full_logits, _ = forward_train(params, toks, cfg, memory_embeds=mem)
+
+    caches = init_from_specs(cache_specs(cfg, B, S, dtype=jnp.float32),
+                             jax.random.key(3))
+    split = S // 2
+    lg, caches = prefill(params, toks[:, :split], cfg, caches,
+                         memory_embeds=mem)
+    np.testing.assert_allclose(np.asarray(lg),
+                               np.asarray(full_logits[:, split - 1]),
+                               rtol=5e-2, atol=5e-3)
+    for t in range(split, S):
+        lg, caches = decode_step(params, toks[:, t:t + 1],
+                                 jnp.asarray(t, jnp.int32), cfg, caches,
+                                 memory=mem)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full_logits[:, t]),
+            rtol=5e-2, atol=5e-3,
+            err_msg=f"{arch}: decode diverges at position {t}")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_exactness(arch):
+    """The FULL config carries the exact assigned hyperparameters."""
+    spec = {
+        "deepseek-7b": (30, 4096, 32, 32, 11008, 102400),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256206),
+        "minicpm3-4b": (62, 2560, 40, 40, 6400, 73448),
+        "deepseek-v2-lite-16b": (27, 2048, 16, 16, 1408, 102400),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "qwen3-14b": (40, 5120, 40, 8, 17408, 151936),
+        "llama-3.2-vision-11b": (40, 4096, 32, 8, 14336, 128256),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "mamba2-130m": (24, 768, 1, 1, 0, 50280),
+    }[arch]
+    cfg = get_config(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab)
+    assert got == spec, (arch, got, spec)
+
+
+def test_moe_param_count_matches_grok():
+    cfg = get_config("grok-1-314b")
+    n = count_params(param_specs(cfg))
+    assert 300e9 < n < 330e9, n
+
+
+def test_sliding_window_cache_is_ring():
+    cfg = get_smoke("h2o-danube-1.8b")           # window 16
+    cs = cache_specs(cfg, B, 64, dtype=jnp.float32)
+    k_spec = jax.tree.leaves(cs)[0]
+    assert k_spec.shape[-3] == 16, "ring cache must be window-sized"
+
+
+def test_mla_cache_is_compressed():
+    cfg = get_smoke("minicpm3-4b")
+    cs = cache_specs(cfg, B, 32, dtype=jnp.float32)
+    leaf_names = set()
+    jax.tree_util.tree_map_with_path(
+        lambda p, v: leaf_names.add(p[-1].key), cs)
+    assert "c_kv" in leaf_names and "k" not in leaf_names
+
+
+def test_ssm_cache_constant_size():
+    cfg = get_smoke("mamba2-130m")
+    c32 = cache_specs(cfg, B, 32, dtype=jnp.float32)
+    c64k = cache_specs(cfg, B, 65536, dtype=jnp.float32)
+    s32 = [s.shape for s in jax.tree.leaves(c32)]
+    s64 = [s.shape for s in jax.tree.leaves(c64k)]
+    assert s32 == s64, "SSM state must be O(1) in context length"

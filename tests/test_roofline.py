@@ -1,0 +1,59 @@
+"""Unit tests for the roofline accounting (benchmarks/roofline.py)."""
+import pytest
+
+from benchmarks.roofline import active_params, model_flops, roofline_row
+from repro.configs import get_config
+from repro.models import count_params, param_specs
+
+
+def test_active_params_dense_equals_total():
+    total = count_params(param_specs(get_config("deepseek-7b")))
+    assert active_params("deepseek-7b") == pytest.approx(total)
+
+
+def test_active_params_moe_less_than_total():
+    """Grok: 8 experts top-2 -> routed compute is 1/4 of routed params."""
+    total = count_params(param_specs(get_config("grok-1-314b")))
+    act = active_params("grok-1-314b")
+    assert act < total
+    # routed fraction dominates grok: active should be well under half
+    assert act / total < 0.5
+
+
+def test_model_flops_shapes():
+    # train = 6*N*tokens; prefill = 2*N*tokens; decode = 2*N*batch
+    n = active_params("h2o-danube-1.8b")
+    assert model_flops("h2o-danube-1.8b", "train_4k") == pytest.approx(
+        6.0 * n * 256 * 4096)
+    assert model_flops("h2o-danube-1.8b", "prefill_32k") == pytest.approx(
+        2.0 * n * 32 * 32768)
+    assert model_flops("h2o-danube-1.8b", "decode_32k") == pytest.approx(
+        2.0 * n * 128)
+
+
+def test_roofline_row_dominant_term():
+    rec = {
+        "arch": "h2o-danube-1.8b", "shape": "decode_32k", "mesh": "16x16",
+        "flops": 1e9, "hlo_bytes": 1e9,
+        "collectives": {"total_bytes": 5e10},
+        "bytes_per_device": 2**30,
+    }
+    row = roofline_row(rec)
+    assert row["chips"] == 256
+    assert row["dominant"] == "collective"     # 1 s vs tiny others
+    assert row["t_collective_s"] == pytest.approx(1.0)
+    assert 0.0 <= row["roofline_frac"] <= 1.0
+
+
+def test_roofline_row_scan_correction_bounded():
+    """The memory-term scan-body correction is clamped to [1, 128]."""
+    rec = {
+        "arch": "deepseek-7b", "shape": "train_4k", "mesh": "2x16x16",
+        "flops": 1.0,            # absurdly small -> scale would explode
+        "hlo_bytes": 1e9,
+        "collectives": {"total_bytes": 0},
+        "bytes_per_device": 0,
+    }
+    row = roofline_row(rec)
+    from repro.launch.mesh import HBM_BW
+    assert row["t_memory_s"] <= 128.0 * 1e9 / HBM_BW + 1e-9

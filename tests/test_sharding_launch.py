@@ -1,0 +1,148 @@
+"""Sharding rules, input specs, and single-device lowering of the SPMD
+steps (the 512-way production lowering is exercised by the dry-run)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_smoke
+from repro.launch import (init_fl_histories, input_specs,
+                          make_debug_mesh, make_hfl_train_step,
+                          make_production_mesh, make_serve_step)
+from repro.launch import sharding as shd
+from repro.models import INPUT_SHAPES, init_from_specs, param_specs
+
+
+def test_production_mesh_shapes():
+    # uses however many host devices exist; only the *spec* is asserted via
+    # the abstract mesh construction in the dry-run.  Here: the debug mesh.
+    m = make_debug_mesh()
+    assert tuple(m.axis_names) == ("data", "model")
+
+
+def test_resolve_spec_divisibility_fallback():
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    # force extents via a fake mesh dict is awkward on 1 device; test the
+    # pure logic through a synthetic mesh-like namespace instead
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    spec = shd.resolve_spec((8, 128), ("kv_heads", None), shd.SERVE_RULES,
+                            FakeMesh)
+    assert spec == P()          # 8 kv heads don't divide 16 -> replicated
+    spec = shd.resolve_spec((32, 128), ("kv_heads", None), shd.SERVE_RULES,
+                            FakeMesh)
+    assert spec == P("model")
+
+
+def test_resolve_spec_secondary_kv_seq():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    # kv_heads=8 can't take model -> kv_seq picks it up in pass 2
+    spec = shd.resolve_spec((128, 32768, 8, 128),
+                            ("act_batch", "kv_seq", "kv_heads", None),
+                            shd.SERVE_RULES, FakeMesh)
+    assert spec == P("data", "model")
+    # kv_heads=16 takes model first -> kv_seq replicated
+    spec = shd.resolve_spec((128, 32768, 16, 128),
+                            ("act_batch", "kv_seq", "kv_heads", None),
+                            shd.SERVE_RULES, FakeMesh)
+    assert spec == P("data", None, "model")
+
+
+def test_resolve_no_axis_reuse_within_tensor():
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    spec = shd.resolve_spec((4096, 11008), ("mlp", "mlp"), shd.TRAIN_RULES,
+                            FakeMesh)
+    assert spec in (P("model"), P("model", None))  # second dim must not reuse
+
+
+def test_train_input_specs_shapes():
+    class FakeMesh:
+        shape = {"pod": 2, "data": 16, "model": 16}
+    cfg = get_config("deepseek-7b")
+    # use the real mesh api through input_specs requires NamedSharding ->
+    # needs a real mesh; use the debug mesh for structure-only checks
+    mesh = make_debug_mesh()
+    specs = input_specs(cfg, INPUT_SHAPES["train_4k"], mesh)
+    e, c = 1, cfg.clients_per_pod
+    b = 256 // (e * c)
+    assert specs["batch"]["tokens"].shape == (e, c, b, 4096)
+    assert specs["dev_mask"].shape == (e, c)
+    leaf = jax.tree.leaves(specs["params"])[0]
+    assert leaf.shape[:2] == (e, c)
+
+
+def test_serve_input_specs_decode():
+    mesh = make_debug_mesh()
+    cfg = get_config("minicpm3-4b")
+    specs = input_specs(cfg, INPUT_SHAPES["decode_32k"], mesh)
+    assert specs["token"].shape == (128, 1)
+    c_kv = jax.tree.leaves(specs["caches"])[0]
+    assert c_kv.shape[-2] == 32768 or c_kv.shape[-3] == 32768
+
+
+def test_hfl_train_step_runs_single_device():
+    """Full hierarchical step (local SGD + HieAvg edge + global agg) on the
+    smoke arch, 1 device, E=1 C=2."""
+    cfg = get_smoke("h2o-danube-1.8b")
+    e, c, b, s = 1, 2, 2, 16
+    key = jax.random.key(0)
+    base = init_from_specs(param_specs(cfg), key)
+    params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (e, c) + x.shape), base)
+    dev_hist, glob_hist = init_fl_histories(params)
+    step = make_hfl_train_step(cfg)
+    batch = {"tokens": jnp.zeros((e, c, b, s), jnp.int32),
+             "labels": jnp.zeros((e, c, b, s), jnp.int32)}
+    p2, dh2, gh2, loss = jax.jit(step)(
+        params, dev_hist, glob_hist, batch,
+        jnp.ones((e, c), bool), jnp.ones((e,), bool),
+        jnp.float32(1e-3))
+    assert np.isfinite(float(loss))
+    # after a global round every client slot holds the same global model
+    l0 = jax.tree.leaves(p2)[0]
+    np.testing.assert_allclose(np.asarray(l0[0, 0]), np.asarray(l0[0, 1]),
+                               rtol=1e-6)
+
+
+def test_hfl_step_straggler_mask_changes_result():
+    cfg = get_smoke("h2o-danube-1.8b")
+    e, c, b, s = 1, 3, 2, 16
+    base = init_from_specs(param_specs(cfg), jax.random.key(0))
+    params = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (e, c) + x.shape), base)
+    dev_hist, glob_hist = init_fl_histories(params)
+    # diverge client weights so masking matters
+    params = jax.tree.map(
+        lambda x: x * (1.0 + 0.1 * jnp.arange(c).reshape(1, c, *[1] *
+                                                         (x.ndim - 2))),
+        params)
+    step = jax.jit(make_hfl_train_step(cfg))
+    batch = {"tokens": jnp.zeros((e, c, b, s), jnp.int32),
+             "labels": jnp.zeros((e, c, b, s), jnp.int32)}
+    args = (dev_hist, glob_hist, batch)
+    p_all, *_ = step(params, *args, jnp.ones((e, c), bool),
+                     jnp.ones((e,), bool), jnp.float32(0.0))
+    p_mask, *_ = step(params, *args,
+                      jnp.array([[True, False, True]]),
+                      jnp.ones((e,), bool), jnp.float32(0.0))
+    diff = sum(float(jnp.abs(a - b).sum())
+               for a, b in zip(jax.tree.leaves(p_all),
+                               jax.tree.leaves(p_mask)))
+    assert diff > 0.0
+
+
+def test_serve_step_runs_single_device():
+    from repro.models import cache_specs
+    cfg = get_smoke("mamba2-130m")
+    params = init_from_specs(param_specs(cfg), jax.random.key(0))
+    caches = init_from_specs(cache_specs(cfg, 2, 32, dtype=jnp.float32),
+                             jax.random.key(1))
+    step = jax.jit(make_serve_step(cfg))
+    logits, caches2 = step(params, jnp.zeros((2, 1), jnp.int32),
+                           jnp.asarray(5, jnp.int32), caches)
+    assert logits.shape == (2, cfg.vocab)
+    assert not bool(jnp.isnan(logits).any())

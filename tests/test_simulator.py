@@ -1,0 +1,76 @@
+"""End-to-end BHFL simulator behaviour (integration tests, small budgets)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.bhfl_cnn import BHFLSetting, REDUCED
+from repro.fl import BHFLSimulator
+
+TINY = dataclasses.replace(REDUCED, t_global_rounds=4, n_edges=3,
+                           j_per_edge=3, image_hw=8)
+KW = dict(n_train=300, n_test=100, steps_per_epoch=2)
+
+
+def test_simulator_runs_and_commits_blocks():
+    sim = BHFLSimulator(TINY, "hieavg", "temporary", "temporary", **KW)
+    r = sim.run()
+    assert len(r.accuracy) == 4
+    assert r.blocks == 4            # one block per global round
+    assert r.chain_valid
+    assert np.all(np.isfinite(r.loss))
+    assert r.sim_latency > 0
+
+
+@pytest.mark.parametrize("agg", ["t_fedavg", "d_fedavg", "fedavg"])
+def test_all_aggregators_run(agg):
+    strag = "none" if agg == "fedavg" else "temporary"
+    r = BHFLSimulator(TINY, agg, strag, strag, **KW).run()
+    assert np.all(np.isfinite(r.accuracy))
+
+
+def test_loss_decreases_over_training():
+    s = dataclasses.replace(TINY, t_global_rounds=8)
+    r = BHFLSimulator(s, "hieavg", "none", "none", **KW).run()
+    assert r.loss[-1] < r.loss[0]
+
+
+def test_inconsistent_j_per_edge():
+    """Fig. 4b: edges may host different numbers of devices."""
+    sim = BHFLSimulator(TINY, "hieavg", "temporary", "temporary",
+                        j_per_edge=[2, 3, 4], **KW)
+    r = sim.run()
+    assert sim.D == 9
+    assert np.all(np.isfinite(r.accuracy))
+
+
+def test_same_seed_reproducible():
+    a = BHFLSimulator(TINY, "hieavg", "temporary", "temporary", **KW).run()
+    b = BHFLSimulator(TINY, "hieavg", "temporary", "temporary", **KW).run()
+    np.testing.assert_allclose(a.accuracy, b.accuracy)
+
+
+def test_straggler_masks_respect_fraction():
+    s = dataclasses.replace(REDUCED, t_global_rounds=3,
+                            permanent_stop_round=1)
+    sim = BHFLSimulator(s, "hieavg", "permanent", "permanent",
+                        n_train=300, n_test=50, steps_per_epoch=1)
+    # 20% of 5 devices = 1 straggler per edge after stop_round
+    m = sim.dev_masks[0]
+    assert (~m[-1]).sum() == 1
+    assert (~sim.edge_masks[-1]).sum() == 1
+
+
+def test_leader_failure_resilience():
+    """The paper's single-point-of-failure claim: the Raft consortium
+    re-elects after a leader crash and training finishes all rounds."""
+    s = dataclasses.replace(TINY, t_global_rounds=6)
+    sim = BHFLSimulator(s, "hieavg", "temporary", "temporary",
+                        normalize=True, fail_leader_at=3, **KW)
+    r = sim.run()
+    assert len(r.accuracy) == 6          # all rounds completed
+    assert r.blocks == 6                 # a block per round despite the crash
+    assert r.chain_valid
+    assert int(sim.chain.alive.sum()) == sim.N - 1
+    assert sim.chain.leader is not None
+    assert sim.chain.alive[sim.chain.leader]

@@ -1,0 +1,105 @@
+"""Substrate layers: data pipeline, optimizer, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.data import by_class, class_images, dirichlet, lm_tokens
+from repro.optim import adam_init, adam_step, paper_lr, sgd_init, sgd_step
+
+
+# -------------------------------------------------------------------- data
+def test_class_images_shapes_and_determinism():
+    x1, y1 = class_images(100, seed=7, hw=14)
+    x2, y2 = class_images(100, seed=7, hw=14)
+    assert x1.shape == (100, 14, 14, 1) and y1.shape == (100,)
+    np.testing.assert_array_equal(x1, x2)
+    assert set(np.unique(y1)) <= set(range(10))
+
+
+@settings(max_examples=8, deadline=None)
+@given(max_classes=st.integers(1, 3), seed=st.integers(0, 30))
+def test_by_class_partition_properties(max_classes, seed):
+    _, labels = class_images(600, seed=seed)
+    parts = by_class(labels, 3, [2, 3, 2], max_classes=max_classes,
+                     seed=seed)
+    assert len(parts) == 3 and [len(p) for p in parts] == [2, 3, 2]
+    all_idx = np.concatenate([i for e in parts for i in e])
+    assert len(all_idx) == len(set(all_idx)), "device shards must be disjoint"
+    for edge in parts:
+        for idx in edge:
+            if len(idx):
+                assert len(np.unique(labels[idx])) <= max_classes
+
+
+def test_dirichlet_partition_disjoint():
+    _, labels = class_images(500, seed=1)
+    parts = dirichlet(labels, 2, [3, 3], alpha=0.5, seed=1)
+    all_idx = np.concatenate([i for e in parts for i in e])
+    assert len(all_idx) == len(set(all_idx))
+
+
+def test_lm_tokens_in_vocab():
+    t = lm_tokens(4, 64, vocab=50, seed=0)
+    assert t.shape == (4, 64) and t.min() >= 0 and t.max() < 50
+
+
+# ------------------------------------------------------------------- optim
+def test_paper_lr_decays_from_eta0():
+    lr0 = paper_lr(jnp.asarray(0), 1e-3, 0.9)
+    lr9 = paper_lr(jnp.asarray(9), 1e-3, 0.9)
+    assert abs(float(lr0) - 1e-3) < 1e-9
+    assert float(lr9) < float(lr0)
+
+
+def test_sgd_momentum_accumulates():
+    p = {"w": jnp.ones(3)}
+    g = {"w": jnp.ones(3)}
+    st_ = sgd_init(p)
+    p1, st_ = sgd_step(p, g, st_, jnp.float32(0.1), momentum=0.9)
+    p2, st_ = sgd_step(p1, g, st_, jnp.float32(0.1), momentum=0.9)
+    # second step is larger due to momentum
+    assert float(p1["w"][0] - p2["w"][0]) > float(1.0 - p1["w"][0])
+
+
+def test_adam_converges_on_quadratic():
+    p = {"w": jnp.asarray(5.0)}
+    st_ = adam_init(p)
+    for _ in range(200):
+        g = {"w": 2 * p["w"]}
+        p, st_ = adam_step(p, g, st_, jnp.float32(0.1))
+    assert abs(float(p["w"])) < 0.1
+
+
+# -------------------------------------------------------------- checkpoint
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones(4, jnp.bfloat16)}}
+    d = str(tmp_path)
+    save_checkpoint(d, 3, tree, metadata={"round": 3})
+    save_checkpoint(d, 7, tree, metadata={"round": 7})
+    assert latest_step(d) == 7
+    like = jax.tree.map(jnp.zeros_like, tree)
+    restored, meta = restore_checkpoint(d, like)
+    assert meta == {"round": 7}
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_checkpoint_structure_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, {"a": jnp.ones(2)})
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, {"a": jnp.ones(2), "b": jnp.ones(1)})
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 0, {"a": jnp.ones(2)})
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, {"a": jnp.ones(3)})
