@@ -1,5 +1,10 @@
 """Fig. 2 — HieAvg vs W/O-Stragglers vs T_FedAvg vs D_FedAvg, under
-permanent (a) and temporary (b) stragglers."""
+permanent (a) and temporary (b) stragglers.
+
+Each run executes on the fully-jitted batched engine (``BHFLSimulator.run``
+delegates to ``repro.fl.engine``); the aggregator is a static program
+branch, so the eight (kind, aggregator) cells are separate compiled calls
+that share one compilation per shape."""
 from __future__ import annotations
 
 from repro.fl import BHFLSimulator

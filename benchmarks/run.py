@@ -3,13 +3,15 @@
   PYTHONPATH=src python -m benchmarks.run            # reduced budget
   BENCH_FULL=1 PYTHONPATH=src python -m benchmarks.run
   PYTHONPATH=src python -m benchmarks.run --only fig2,roofline
+  PYTHONPATH=src python -m benchmarks.run --only engine --emit-json
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
-from . import (ablations, fig2_convergence, fig3_sweeps,
+from . import (ablations, bench_engine, fig2_convergence, fig3_sweeps,
                fig4_heterogeneity, fig56_single_layer, fig7_latency,
                kernel_bench, roofline)
 
@@ -22,6 +24,7 @@ SUITES = {
     "ablations": ablations.main,
     "kernels": kernel_bench.main,
     "roofline": lambda: roofline.main([]),
+    "engine": bench_engine.main,
 }
 
 
@@ -29,11 +32,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
+    ap.add_argument("--emit-json", action="store_true",
+                    help="write BENCH_engine.json (engine suite)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
+    suites = dict(SUITES)
+    suites["engine"] = functools.partial(bench_engine.main,
+                                         emit_json=args.emit_json)
     t0 = time.time()
     for name in names:
-        SUITES[name]()
+        suites[name]()
     print(f"# all benchmarks done in {time.time() - t0:.0f}s")
 
 

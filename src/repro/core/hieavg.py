@@ -246,6 +246,70 @@ def global_aggregate(stacked_w: PyTree, mask: jnp.ndarray, history: History,
                            normalize)
 
 
+def aggregate(stacked_w: PyTree, mask: jnp.ndarray, history: History,
+              part_weights: jnp.ndarray, gamma0, lam,
+              normalize: bool = False) -> tuple[PyTree, History]:
+    """Trace-friendly eq. (4)/(5): like ``edge_aggregate``/``global_aggregate``
+    but with ``gamma0``/``lam`` as (possibly traced) values and no jit
+    boundary, so it composes under ``vmap``/``scan`` inside a larger program
+    (the batched engine sweeps gamma/lambda as data, not as recompiles).
+    ``part_weights`` is taken as-is (pre-normalized by the caller)."""
+    return _mix_and_update(stacked_w, mask, history, part_weights, gamma0,
+                           lam, normalize)
+
+
+# ------------------------------------------------- batched (dense) layer API
+# The fl.engine drives all N edges at once: stacked weights carry TWO leading
+# dims [N, J, ...] (edge, device-slot), histories likewise, and a boolean
+# ``valid`` [N, J] marks real device slots (False = ragged-J padding).  Padded
+# slots get part-weight 0 so they contribute exactly nothing to the mix, and
+# their history entries are dead state that is never read back.
+
+def init_history_batched(stacked_w: PyTree) -> History:
+    """Cold-boot history for dense [N, J, ...] stacked weights."""
+    leaves = jax.tree_util.tree_leaves(stacked_w)
+    n, j = leaves[0].shape[:2]
+    return History(
+        prev_w=jax.tree.map(jnp.asarray, stacked_w),
+        delta_mean=jax.tree.map(jnp.zeros_like, stacked_w),
+        n_obs=jnp.zeros((n, j), jnp.float32),
+        miss_count=jnp.zeros((n, j), jnp.float32),
+    )
+
+
+def update_history_batched(history: History, stacked_w: PyTree,
+                           mask: jnp.ndarray) -> History:
+    """``update_history`` vmapped over the leading edge dim."""
+    return jax.vmap(update_history)(history, stacked_w, mask)
+
+
+def edge_aggregate_batched(stacked_w: PyTree, mask: jnp.ndarray,
+                           history: History, valid: jnp.ndarray,
+                           gamma0, lam, normalize: bool = False
+                           ) -> tuple[PyTree, History]:
+    """Eq. (4) for ALL N edges in one vmapped ``_mix_and_update`` call.
+
+    stacked_w leaves [N, J, ...]; mask/valid [N, J]; history leaves likewise.
+    Per-edge part weights are ``valid / J_e`` — identical to the legacy
+    ``1/J_e`` on real slots, zero on padding.  Returns ([N, ...] edge models,
+    updated batched history).
+    """
+    v = valid.astype(jnp.float32)
+    pw = v / jnp.maximum(jnp.sum(v, axis=-1, keepdims=True), 1.0)
+
+    def one_edge(w, m, h, p):
+        return _mix_and_update(w, m, h, p, gamma0, lam, normalize)
+
+    return jax.vmap(one_edge)(stacked_w, mask, history, pw)
+
+
+def edge_aggregate_cold_batched(stacked_w: PyTree, valid: jnp.ndarray
+                                ) -> PyTree:
+    """Eq. (2) for all edges at once: per-edge mean over *valid* slots."""
+    return jax.vmap(global_aggregate_cold)(stacked_w,
+                                           valid.astype(jnp.float32))
+
+
 @jax.jit
 def edge_aggregate_cold(stacked_w: PyTree) -> PyTree:
     """Eq. (2) during cold boot — plain mean over devices (no stragglers)."""

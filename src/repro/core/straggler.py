@@ -49,6 +49,33 @@ def temporary(rounds: int, n: int, n_stragglers: int, miss_prob: float = 0.5,
     return mask
 
 
+def stack_ragged(schedules: list[np.ndarray], j_max: int | None = None
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Stack per-edge ragged schedules into one dense device-layer tensor.
+
+    ``schedules``: per-edge boolean arrays ``[rounds, J_e]`` (the output of
+    ``from_fraction`` per edge).  Returns ``(dense, valid)`` where ``dense``
+    is ``[rounds, N, J_max]`` with padded slots False (always-straggling —
+    they carry zero aggregation weight anyway) and ``valid`` is ``[N, J_max]``
+    marking real device slots.  This is the layout the jitted engine consumes:
+    one gather instead of N ragged slices per round.
+    """
+    rounds = schedules[0].shape[0]
+    if any(s.shape[0] != rounds for s in schedules):
+        raise ValueError("all per-edge schedules need the same round count")
+    n = len(schedules)
+    jm = j_max if j_max is not None else max(s.shape[1] for s in schedules)
+    dense = np.zeros((rounds, n, jm), dtype=bool)
+    valid = np.zeros((n, jm), dtype=bool)
+    for e, sched in enumerate(schedules):
+        je = sched.shape[1]
+        if je > jm:
+            raise ValueError(f"edge {e} has {je} devices > j_max={jm}")
+        dense[:, e, :je] = sched
+        valid[e, :je] = True
+    return dense, valid
+
+
 def from_fraction(rounds: int, n: int, frac: float, kind: str = "temporary",
                   **kw) -> np.ndarray:
     """Paper basic setting: 20% stragglers per layer -> n_stragglers = frac*n."""

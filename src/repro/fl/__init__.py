@@ -1,3 +1,7 @@
+from .engine import (EngineInputs, SweepResult, build_inputs, run_engine,
+                     run_sweep)
 from .simulator import BHFLSimulator, RunResult, run_comparison
 
-__all__ = ["BHFLSimulator", "RunResult", "run_comparison"]
+__all__ = ["BHFLSimulator", "RunResult", "run_comparison",
+           "EngineInputs", "SweepResult", "build_inputs", "run_engine",
+           "run_sweep"]

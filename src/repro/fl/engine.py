@@ -1,0 +1,377 @@
+"""Fully-jitted batched BHFL simulation engine.
+
+The legacy ``BHFLSimulator.run`` loop dispatches one jitted aggregation call
+per edge per edge-round plus host-side numpy batching — every sweep point
+pays per-edge dispatch and host→device transfer overhead.  This engine
+compiles an ENTIRE run into one program:
+
+  * ragged ``j_per_edge`` is padded into a dense ``[N, J_max]`` device layout
+    with a boolean ``valid`` mask (padded slots carry zero aggregation
+    weight and are overwritten by the edge sync every round),
+  * HieAvg edge aggregation is one vmapped ``_mix_and_update`` across all N
+    edges instead of N sequential calls,
+  * straggler masks, batch indices, and the learning-rate schedule are
+    precomputed host-side into dense arrays (``core.straggler.stack_ragged``),
+  * the K edge rounds and the global aggregation are driven by nested
+    ``jax.lax.scan`` — one global round is one fused XLA computation, and the
+    T rounds run without returning to Python,
+  * ``run_sweep`` adds a ``vmap`` sweep axis so Fig. 3-style
+    multi-seed/multi-fraction grids execute as a single batched call.
+
+The Raft chain (control plane, no model numerics) is replayed host-side
+*before* the jitted run: it consumes the same RNG stream in the same order as
+the legacy loop, so leader failover produces identical edge masks.
+
+Parity with ``BHFLSimulator.run_legacy`` is tested in
+``tests/test_engine_parity.py``; throughput is tracked in
+``BENCH_engine.json`` (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, hieavg
+from repro.core import straggler as strag
+from repro.models import (cnn_accuracy_fast, cnn_loss, cnn_loss_fast,
+                          init_from_specs)
+from repro.optim import paper_lr
+
+PyTree = Any
+
+
+# --------------------------------------------------------------- local step
+def train_epoch_body(params: PyTree, images: jnp.ndarray,
+                     labels: jnp.ndarray, lr: jnp.ndarray,
+                     loss_fn=cnn_loss_fast) -> tuple[PyTree, jnp.ndarray]:
+    """One local epoch for all devices.  params: stacked [D, ...];
+    images: [D, steps, B, H, W, 1]; labels: [D, steps, B]. Returns
+    (new stacked params, mean loss per device [D]).
+
+    scan(vmap(step)) rather than vmap(scan): one fused all-device matmul per
+    step instead of D separate small ones.  The engine trains with the
+    im2col conv (``cnn_loss_fast``); the legacy reference loop keeps the
+    shifted-sum conv (same math, different summation order).
+    """
+
+    def step(ps, xs):
+        im, lb = xs                                     # [D, B, ...]
+        loss, g = jax.vmap(jax.value_and_grad(loss_fn))(ps, im, lb)
+        ps = jax.tree.map(lambda w, gw: w - lr * gw, ps, g)
+        return ps, loss
+
+    images = jnp.swapaxes(images, 0, 1)                 # [steps, D, ...]
+    labels = jnp.swapaxes(labels, 0, 1)
+    params, losses = jax.lax.scan(step, params, (images, labels))
+    return params, jnp.mean(losses, axis=0)
+
+
+# jitted legacy-exact epoch (shifted-sum conv), used by run_legacy
+train_epoch = jax.jit(partial(train_epoch_body, loss_fn=cnn_loss))
+
+
+# ------------------------------------------------------------ dense inputs
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EngineInputs:
+    """Everything a jitted run consumes, as dense device arrays.
+
+    Leaves are stackable across grid points (``run_sweep`` vmaps over a
+    leading point axis); gamma0/lam/t_cold_boot ride along as scalars so
+    decay-factor sweeps are data, not recompiles.
+    """
+
+    train_x: jnp.ndarray      # [n_train, H, W, 1] f32
+    train_y: jnp.ndarray      # [n_train] i32
+    test_x: jnp.ndarray       # [n_test, H, W, 1] f32
+    test_y: jnp.ndarray       # [n_test] i32
+    init_w: PyTree            # global model at t=0
+    batch_idx: jnp.ndarray    # [T, K, N, J, steps, B] i32 into train_x
+    has_data: jnp.ndarray     # [N, J] f32 — 0 for empty-shard/padded slots
+    valid: jnp.ndarray        # [N, J] bool — real device slots
+    dev_masks: jnp.ndarray    # [T, K, N, J] bool submission masks
+    edge_masks: jnp.ndarray   # [T, N] bool (failover already applied)
+    lr: jnp.ndarray           # [T, K] f32 paper schedule
+    j_arr: jnp.ndarray        # [N] f32 devices per edge (global weights)
+    gamma0: jnp.ndarray       # scalar f32
+    lam: jnp.ndarray          # scalar f32
+    t_cold_boot: jnp.ndarray  # scalar i32
+
+
+def replay_chain(sim) -> None:
+    """Replay the control plane exactly as the legacy loop interleaves it:
+    elect → (maybe crash the leader) → commit, once per global round.
+
+    Mutates ``sim.chain`` and — on leader failure — ``sim.edge_masks``
+    in place, identically to ``BHFLSimulator.run_legacy`` (the chain RNG
+    stream is consumed in the same order, so the same leaders win).  The
+    crash itself is applied at most once per simulator: a repeated
+    ``run()`` replays the same failed edge instead of killing another
+    leader (which would eventually lose Raft quorum).
+    """
+    failed_edge: Optional[int] = getattr(sim, "_failed_leader", None)
+    for t in range(1, sim.s.t_global_rounds + 1):
+        sim.chain.elect_leader()
+        if (sim.fail_leader_at is not None and t == sim.fail_leader_at
+                and failed_edge is None):
+            failed_edge = sim.chain.leader
+            sim.chain.fail_node(failed_edge)
+            sim._failed_leader = failed_edge
+        if failed_edge is not None and t >= sim.fail_leader_at:
+            # only from the crash round on — a repeated replay must not
+            # widen the outage to earlier rounds
+            sim.edge_masks[t - 1:, failed_edge] = False
+        sim.chain.commit_block(f"edges@t={t}", f"global@t={t}")
+
+
+def build_inputs(sim) -> EngineInputs:
+    """Precompute a ``BHFLSimulator``'s whole run into dense device arrays.
+
+    Batch indices are sampled from a fresh ``default_rng(seed)`` in the same
+    (round, device) order as the legacy loop's per-round ``_epoch_batches``,
+    so a fresh legacy instance and a fresh engine instance see identical
+    batches.  Also replays the Raft chain (see ``replay_chain``).
+    """
+    s = sim.s
+    T, K, N = s.t_global_rounds, s.k_edge_rounds, sim.N
+    steps, bs = sim.steps, s.batch_size
+
+    replay_chain(sim)
+
+    dense_dev, valid = strag.stack_ragged(sim.dev_masks)
+    J = valid.shape[1]
+    dev_masks = dense_dev[:T * K].reshape(T, K, N, J)
+    edge_masks = np.asarray(sim.edge_masks[:T], dtype=bool)
+
+    # batch indices in legacy order: per edge-round, per device
+    rng = np.random.default_rng(sim.seed)
+    R = T * K
+    flat_idx = np.zeros((R, sim.D, steps, bs), np.int32)
+    flat_has = np.zeros((sim.D,), np.float32)
+    for r in range(R):
+        for d, idx in enumerate(sim.device_idx):
+            if len(idx) == 0:
+                continue
+            flat_idx[r, d] = rng.choice(idx, size=(steps, bs), replace=True)
+            flat_has[d] = 1.0
+    batch_idx = np.zeros((R, N, J, steps, bs), np.int32)
+    has_data = np.zeros((N, J), np.float32)
+    d = 0
+    for e in range(N):
+        for j in range(sim.j_per_edge[e]):
+            batch_idx[:, e, j] = flat_idx[:, d]
+            has_data[e, j] = flat_has[d]
+            d += 1
+
+    lr = paper_lr(jnp.arange(R), s.lr0, s.lr_decay).reshape(T, K)
+    init_w = init_from_specs(sim.specs, jax.random.key(sim.seed))
+
+    return EngineInputs(
+        train_x=jnp.asarray(sim.train_x), train_y=jnp.asarray(sim.train_y),
+        test_x=sim.test_x, test_y=sim.test_y, init_w=init_w,
+        batch_idx=jnp.asarray(batch_idx.reshape(T, K, N, J, steps, bs)),
+        has_data=jnp.asarray(has_data), valid=jnp.asarray(valid),
+        dev_masks=jnp.asarray(dev_masks), edge_masks=jnp.asarray(edge_masks),
+        lr=lr, j_arr=jnp.asarray(sim.j_per_edge, jnp.float32),
+        gamma0=jnp.float32(s.gamma0), lam=jnp.float32(s.lam),
+        t_cold_boot=jnp.int32(s.t_cold_boot))
+
+
+# ------------------------------------------------------------- jitted run
+@partial(jax.jit, static_argnames=("aggregator", "normalize"))
+def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
+               normalize: bool = False
+               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One whole BHFL run as a single compiled program.
+
+    Returns per-global-round (accuracy [T], mean local loss [T],
+    global-model round-to-round delta norm [T]).
+    """
+    T, K, N, J = inp.dev_masks.shape
+    steps, bs = inp.batch_idx.shape[-2:]
+    D = N * J
+    v32 = inp.valid.astype(jnp.float32)
+    hd = inp.has_data
+
+    def bcast_edges(tree):   # [...] global -> [N, ...]
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (N,) + x.shape), tree)
+
+    def bcast_devices(tree):  # [N, ...] edge models -> [N, J, ...]
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[:, None], (N, J) + x.shape[1:]),
+            tree)
+
+    def flat(tree):           # [N, J, ...] -> [N*J, ...]
+        return jax.tree.map(lambda x: x.reshape((D,) + x.shape[2:]), tree)
+
+    def unflat(tree):
+        return jax.tree.map(lambda x: x.reshape((N, J) + x.shape[1:]), tree)
+
+    def global_round(carry, xs):
+        device_w, ehist, elast, ghist, glast, prev_global = carry
+        t, bidx_t, dmask_t, emask, lr_t = xs
+
+        # ---- K edge rounds: local epoch + per-edge aggregation + sync
+        def edge_round(c, xs_k):
+            device_w, ehist, elast = c
+            bidx, dmask, lr, r = xs_k   # [N,J,steps,B], [N,J], scalar, scalar
+
+            x = inp.train_x[bidx] * hd[:, :, None, None, None, None, None]
+            y = jnp.where(hd[:, :, None, None] > 0, inp.train_y[bidx], 0)
+            pflat, loss = train_epoch_body(
+                flat(device_w), x.reshape((D, steps, bs) + x.shape[4:]),
+                y.reshape(D, steps, bs), lr)
+            ws = unflat(pflat)
+            dev_loss = loss.reshape(N, J)
+
+            if aggregator == "hieavg":
+                ehist = jax.lax.cond(
+                    r == 0, lambda h: hieavg.init_history_batched(ws),
+                    lambda h: h, ehist)
+
+                def cold(w, m, h):
+                    return (hieavg.edge_aggregate_cold_batched(w, inp.valid),
+                            hieavg.update_history_batched(h, w, m))
+
+                def warm(w, m, h):
+                    return hieavg.edge_aggregate_batched(
+                        w, m, h, inp.valid, inp.gamma0, inp.lam, normalize)
+
+                edge_models, ehist = jax.lax.cond(
+                    t <= inp.t_cold_boot, cold, warm, ws, dmask, ehist)
+            elif aggregator == "t_fedavg":
+                edge_models = jax.vmap(baselines.t_fedavg)(ws, dmask, v32)
+            elif aggregator == "d_fedavg":
+                m_eff = jnp.logical_or(dmask, r == 0)  # first round: all in
+                edge_models, elast = jax.vmap(baselines.d_fedavg)(
+                    ws, m_eff, elast, v32)
+            elif aggregator == "fedavg":
+                edge_models = jax.vmap(baselines.fedavg)(ws, v32)
+            else:
+                raise ValueError(f"unknown aggregator {aggregator!r}")
+
+            return (bcast_devices(edge_models), ehist, elast), dev_loss
+
+        rs = (t - 1) * K + jnp.arange(K)
+        (device_w, ehist, elast), dev_losses = jax.lax.scan(
+            edge_round, (device_w, ehist, elast),
+            (bidx_t, dmask_t, lr_t, rs))
+        # after the sync every device slot holds its edge model
+        edge_models = jax.tree.map(lambda x: x[:, 0], device_w)
+
+        # ---- global aggregation on the (replayed) leader
+        if aggregator == "hieavg":
+            ghist = jax.lax.cond(
+                t == 1, lambda h: hieavg.init_history(edge_models),
+                lambda h: h, ghist)
+            pw = inp.j_arr / jnp.sum(inp.j_arr)
+
+            def coldg(w, m, h):
+                return (hieavg.global_aggregate_cold(w, inp.j_arr),
+                        hieavg.update_history(h, w, m))
+
+            def warmg(w, m, h):
+                return hieavg.aggregate(w, m, h, pw, inp.gamma0, inp.lam,
+                                        normalize)
+
+            global_w, ghist = jax.lax.cond(
+                t <= inp.t_cold_boot, coldg, warmg, edge_models, emask, ghist)
+        elif aggregator == "t_fedavg":
+            global_w = baselines.t_fedavg(edge_models, emask, inp.j_arr)
+        elif aggregator == "d_fedavg":
+            m_eff = jnp.logical_or(emask, t == 1)
+            global_w, glast = baselines.d_fedavg(
+                edge_models, m_eff, glast, inp.j_arr)
+        else:
+            global_w = baselines.fedavg(edge_models, inp.j_arr)
+
+        device_w = bcast_devices(bcast_edges(global_w))
+
+        # ---- per-round metrics (same definitions as the legacy loop);
+        # test accuracy is evaluated OUTSIDE the scan, batched over rounds
+        loss = jnp.sum(dev_losses[-1] * v32) / jnp.maximum(jnp.sum(v32), 1.0)
+        delta = jnp.sqrt(sum(
+            jnp.sum(jnp.square(a - b)) for a, b in
+            zip(jax.tree.leaves(global_w), jax.tree.leaves(prev_global))))
+        return (device_w, ehist, elast, ghist, glast, global_w), \
+            (global_w, loss, delta)
+
+    edge0 = bcast_edges(inp.init_w)
+    dev0 = bcast_devices(edge0)
+    carry0 = (dev0,
+              hieavg.init_history_batched(dev0),       # overwritten at r==0
+              jax.tree.map(jnp.zeros_like, dev0),      # d_fedavg last stores
+              hieavg.init_history(edge0),              # overwritten at t==1
+              jax.tree.map(jnp.zeros_like, edge0),
+              inp.init_w)
+    xs = (jnp.arange(1, T + 1), inp.batch_idx, inp.dev_masks,
+          inp.edge_masks, inp.lr)
+    _, (globals_per_round, losses, deltas) = jax.lax.scan(
+        global_round, carry0, xs)
+    # test-set eval over the T round snapshots, outside the training scan.
+    # lax.map (not vmap): one whole-test-set batched matmul per round with
+    # round-at-a-time peak memory — vmapping all T rounds through the 9x
+    # im2col intermediate is O(T * n_test * H * W * 9c) and OOMs at the
+    # paper's DEFAULT sizes.
+    accs = jax.lax.map(
+        lambda w: cnn_accuracy_fast(w, inp.test_x, inp.test_y),
+        globals_per_round)
+    return accs, losses, deltas
+
+
+# ----------------------------------------------------------------- sweeps
+@dataclasses.dataclass
+class SweepResult:
+    """Batched trajectories for a grid of runs (leading axis = grid point)."""
+    points: list              # (overrides dict, seed) per grid point
+    accuracy: np.ndarray      # [P, T]
+    loss: np.ndarray          # [P, T]
+    grad_norm: np.ndarray     # [P, T]
+    sim_latency: np.ndarray   # [P]
+    blocks: np.ndarray        # [P]
+
+
+def run_sweep(setting, seeds=(0,), *, overrides: Optional[list] = None,
+              aggregator: str = "hieavg",
+              device_stragglers: str = "temporary",
+              edge_stragglers: str = "temporary",
+              normalize: bool = False, **sim_kw) -> SweepResult:
+    """Fig. 3-style grids as ONE batched call.
+
+    ``overrides`` is a list of ``BHFLSetting`` field-override dicts (e.g.
+    ``[{"straggler_frac": 0.2}, {"straggler_frac": 0.4}]``), crossed with
+    ``seeds``.  Every grid point is precomputed host-side into
+    ``EngineInputs``; the stacked inputs run as a single
+    ``vmap(run_engine)`` — no per-point dispatch or re-trace.  All points
+    must agree on shape-determining fields (rounds, topology, image size);
+    straggler fractions/kinds, gamma/lambda, cold-boot length, and seeds may
+    vary freely.
+    """
+    from repro.fl.simulator import BHFLSimulator  # lazy: avoid import cycle
+
+    points = [(ov, seed) for ov in (overrides or [{}]) for seed in seeds]
+    sims = [BHFLSimulator(dataclasses.replace(setting, **ov), aggregator,
+                          device_stragglers, edge_stragglers,
+                          normalize=normalize, seed=seed, **sim_kw)
+            for ov, seed in points]
+    inputs = [build_inputs(s) for s in sims]
+    shapes = [jax.tree.map(jnp.shape, i) for i in inputs]
+    if any(s != shapes[0] for s in shapes[1:]):
+        raise ValueError("run_sweep grid points must share all array shapes "
+                         "(rounds, topology, image size, batch schedule)")
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *inputs)
+    accs, losses, deltas = jax.vmap(
+        lambda i: run_engine(i, aggregator=aggregator, normalize=normalize)
+    )(stacked)
+    return SweepResult(
+        points=points,
+        accuracy=np.asarray(accs), loss=np.asarray(losses),
+        grad_norm=np.asarray(deltas),
+        sim_latency=np.asarray([s.paper_latency() for s in sims]),
+        blocks=np.asarray([len(s.chain.blocks) - 1 for s in sims]))

@@ -18,12 +18,17 @@ schedules).
 
 All devices are simulated in one jitted vmap over the stacked device
 dimension, so a full Fig. 2 run takes seconds on CPU.
+
+``run()`` delegates to the fully-jitted batched engine (``repro.fl.engine``):
+one compiled program per run instead of a Python loop per edge per round.
+The original per-edge loop is kept as ``run_legacy()`` — it is the numerics
+reference for ``tests/test_engine_parity.py`` and the baseline for
+``BENCH_engine.json``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -34,34 +39,15 @@ from repro.configs.bhfl_cnn import BHFLSetting
 from repro.core import (RaftChain, baselines, hieavg, latency as lat,
                         straggler as strag)
 from repro.data import by_class, class_images
-from repro.models import cnn_accuracy, cnn_loss, cnn_specs, init_from_specs
+from repro.models import cnn_accuracy, cnn_specs, init_from_specs
 from repro.optim import paper_lr
+
+from . import engine as _engine
 
 PyTree = Any
 
-
-# --------------------------------------------------------------- local step
-@partial(jax.jit, static_argnames=())
-def _train_epoch(params: PyTree, images: jnp.ndarray, labels: jnp.ndarray,
-                 lr: jnp.ndarray) -> tuple[PyTree, jnp.ndarray]:
-    """One local epoch for all devices.  params: stacked [D, ...];
-    images: [D, steps, B, H, W, 1]; labels: [D, steps, B]. Returns
-    (new stacked params, mean loss per device [D]).
-
-    scan(vmap(step)) rather than vmap(scan): one fused all-device matmul per
-    step instead of D separate small ones.
-    """
-
-    def step(ps, xs):
-        im, lb = xs                                     # [D, B, ...]
-        loss, g = jax.vmap(jax.value_and_grad(cnn_loss))(ps, im, lb)
-        ps = jax.tree.map(lambda w, gw: w - lr * gw, ps, g)
-        return ps, loss
-
-    images = jnp.swapaxes(images, 0, 1)                 # [steps, D, ...]
-    labels = jnp.swapaxes(labels, 0, 1)
-    params, losses = jax.lax.scan(step, params, (images, labels))
-    return params, jnp.mean(losses, axis=0)
+# the shared local-training epoch lives in the engine module now
+_train_epoch = _engine.train_epoch
 
 
 def _stack(trees: list[PyTree]) -> PyTree:
@@ -172,8 +158,42 @@ class BHFLSimulator:
             ys[d] = self.train_y[take]
         return jnp.asarray(xs), jnp.asarray(ys)
 
+    def paper_latency(self) -> float:
+        """The paper's latency model total (Sec. 5.1.4) for this deployment."""
+        lp = lat.LatencyParams(T=self.s.t_global_rounds, N=self.N,
+                               J=int(np.mean(self.j_per_edge)))
+        return lat.total_latency(self.s.k_edge_rounds, lp)
+
     # ----------------------------------------------------------------- run
     def run(self, progress: bool = False) -> RunResult:
+        """Run the deployment on the fully-jitted batched engine.
+
+        Numerically equivalent to ``run_legacy`` (see
+        tests/test_engine_parity.py) but executes the whole run as one
+        compiled program.  Uses a fresh batch-RNG seeded with ``self.seed``,
+        so every ``run()`` call on the same instance is identical; the Raft
+        chain, however, advances per call exactly like the legacy loop.
+        """
+        t0 = time.time()
+        inp = _engine.build_inputs(self)
+        accs, losses, deltas = _engine.run_engine(
+            inp, aggregator=self.aggregator, normalize=self.normalize)
+        accs, losses, deltas = (np.asarray(accs), np.asarray(losses),
+                                np.asarray(deltas))
+        if progress:
+            for t in range(1, self.s.t_global_rounds + 1):
+                if t % 10 == 0 or t == 1:
+                    print(f"  t={t:3d} acc={accs[t - 1]:.4f} "
+                          f"loss={losses[t - 1]:.4f}")
+        return RunResult(
+            accuracy=accs, loss=losses, grad_norm=deltas,
+            wall_time=time.time() - t0, sim_latency=self.paper_latency(),
+            blocks=len(self.chain.blocks) - 1,
+            chain_valid=self.chain.validate())
+
+    # ---------------------------------------------------------- legacy run
+    def run_legacy(self, progress: bool = False) -> RunResult:
+        """The original per-edge Python loop (numerics reference)."""
         s = self.s
         t0 = time.time()
         key = jax.random.key(self.seed)
@@ -250,15 +270,11 @@ class BHFLSimulator:
             if progress and (t % 10 == 0 or t == 1):
                 print(f"  t={t:3d} acc={acc:.4f} loss={losses[-1]:.4f}")
 
-        # paper's latency model (Sec. 5.1.4) for this deployment
-        lp = lat.LatencyParams(T=s.t_global_rounds, N=self.N,
-                               J=int(np.mean(self.j_per_edge)))
-        sim_latency = lat.total_latency(s.k_edge_rounds, lp)
-
         return RunResult(
             accuracy=np.asarray(accs), loss=np.asarray(losses),
             grad_norm=np.asarray(deltas), wall_time=time.time() - t0,
-            sim_latency=sim_latency, blocks=len(self.chain.blocks) - 1,
+            sim_latency=self.paper_latency(),
+            blocks=len(self.chain.blocks) - 1,
             chain_valid=self.chain.validate())
 
     # ------------------------------------------------------- agg dispatch

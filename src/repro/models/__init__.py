@@ -6,7 +6,8 @@ from .spec import (ParamSpec, init_from_specs, abstract_from_specs,
                    logical_axes, count_params)
 from .transformer import (param_specs, cache_specs, forward_train, loss_fn,
                           prefill, decode_step, encode)
-from .cnn import cnn_specs, cnn_apply, cnn_loss, cnn_accuracy
+from .cnn import (cnn_specs, cnn_apply, cnn_apply_fast, cnn_loss,
+                  cnn_loss_fast, cnn_accuracy, cnn_accuracy_fast)
 
 __all__ = [
     "ArchConfig", "EncoderConfig", "InputShape", "MLAConfig", "MoEConfig",
@@ -16,5 +17,6 @@ __all__ = [
     "count_params",
     "param_specs", "cache_specs", "forward_train", "loss_fn", "prefill",
     "decode_step", "encode",
-    "cnn_specs", "cnn_apply", "cnn_loss", "cnn_accuracy",
+    "cnn_specs", "cnn_apply", "cnn_apply_fast", "cnn_loss", "cnn_loss_fast",
+    "cnn_accuracy", "cnn_accuracy_fast",
 ]

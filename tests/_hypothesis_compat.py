@@ -1,0 +1,90 @@
+"""Optional-``hypothesis`` shim for the property-style tests.
+
+When ``hypothesis`` is installed the real ``given``/``settings``/``st`` are
+re-exported unchanged.  When it is absent (the CI image does not bake it in)
+a deterministic fallback runs each property over a fixed, seeded list of
+examples instead: every strategy is a draw function over a ``numpy``
+Generator seeded from the test's qualified name, so failures reproduce
+exactly across runs and machines.
+
+Only the strategy surface the test-suite actually uses is implemented
+(``integers``, ``sampled_from``, ``booleans``, ``floats``).  Tests import
+from this module instead of ``hypothesis`` directly:
+
+    from _hypothesis_compat import given, settings, st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect as _inspect
+    import zlib
+
+    import numpy as _np
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        """A strategy is just a draw function rng -> example."""
+
+        def __init__(self, draw):
+            self.draw = draw
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(elements):
+            elems = list(elements)
+            return _Strategy(lambda rng: elems[int(rng.integers(len(elems)))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(2)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+    st = _Strategies()
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+        """Accepts (and ignores) hypothesis kwargs like ``deadline``."""
+
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper():
+                n = getattr(wrapper, "_compat_max_examples",
+                            _DEFAULT_MAX_EXAMPLES)
+                # stable per-test seed: failures replay identically
+                rng = _np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode()))
+                for _ in range(n):
+                    example = {k: s.draw(rng)
+                               for k, s in sorted(strategies.items())}
+                    fn(**example)
+
+            # pytest introspects signatures to resolve fixtures; the strategy
+            # args are filled here, so expose a parameterless signature
+            del wrapper.__wrapped__
+            wrapper.__signature__ = _inspect.Signature()
+            return wrapper
+
+        return deco

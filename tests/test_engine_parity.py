@@ -1,0 +1,97 @@
+"""The fully-jitted batched engine matches the legacy per-edge loop.
+
+``BHFLSimulator.run`` (engine) and ``BHFLSimulator.run_legacy`` (original
+Python loop) consume the same seeds, schedules, and batch-sampling order, so
+their trajectories must agree.  The engine trains with the im2col conv
+(``cnn_loss_fast``) — same math as the legacy shifted-sum conv up to float32
+summation order — so trajectories are compared within tolerance, not
+bitwise.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.bhfl_cnn import REDUCED
+from repro.fl import BHFLSimulator
+
+TINY = dataclasses.replace(REDUCED, t_global_rounds=4, n_edges=3,
+                           j_per_edge=3, image_hw=8)
+KW = dict(n_train=300, n_test=100, steps_per_epoch=2)
+
+ACC_TOL = 0.02     # accuracy is a discrete metric: borderline test samples
+LOSS_TOL = 1e-3    # may flip under reordered float32 sums
+
+
+def _pair(agg, strag="temporary", setting=TINY, **kw):
+    a = BHFLSimulator(setting, agg, strag, strag, **KW, **kw).run_legacy()
+    b = BHFLSimulator(setting, agg, strag, strag, **KW, **kw).run()
+    return a, b
+
+
+def _check(a, b):
+    np.testing.assert_allclose(b.accuracy, a.accuracy, atol=ACC_TOL)
+    np.testing.assert_allclose(b.loss, a.loss, rtol=LOSS_TOL, atol=LOSS_TOL)
+    np.testing.assert_allclose(b.grad_norm, a.grad_norm, rtol=0.01,
+                               atol=1e-4)
+    assert b.blocks == a.blocks
+    assert b.chain_valid and a.chain_valid
+
+
+@pytest.mark.parametrize("agg", ["hieavg", "t_fedavg", "d_fedavg", "fedavg"])
+def test_parity_all_aggregators(agg):
+    strag = "none" if agg == "fedavg" else "temporary"
+    _check(*_pair(agg, strag))
+
+
+def test_parity_ragged_j_per_edge():
+    """Dense [N, J_max] padding must not perturb ragged deployments."""
+    _check(*_pair("hieavg", j_per_edge=[2, 3, 4]))
+
+
+def test_parity_permanent_normalized():
+    s = dataclasses.replace(TINY, permanent_stop_round=1)
+    _check(*_pair("hieavg", "permanent", setting=s, normalize=True))
+
+
+def test_parity_leader_failover():
+    s = dataclasses.replace(TINY, t_global_rounds=6)
+    a, b = _pair("hieavg", setting=s, normalize=True, fail_leader_at=3)
+    _check(a, b)
+    assert a.blocks == 6 and b.blocks == 6
+
+
+def test_engine_run_is_deterministic():
+    """run() re-seeds its batch RNG: two engine runs of equal-seed sims
+    (fresh instances) are identical."""
+    r1 = BHFLSimulator(TINY, "hieavg", "temporary", "temporary", **KW).run()
+    r2 = BHFLSimulator(TINY, "hieavg", "temporary", "temporary", **KW).run()
+    np.testing.assert_array_equal(r1.accuracy, r2.accuracy)
+    np.testing.assert_array_equal(r1.loss, r2.loss)
+
+
+def test_repeated_run_with_failover_is_stable():
+    """A second run() on a fail_leader_at simulator must replay the SAME
+    crashed edge (not kill another leader and lose Raft quorum)."""
+    s = dataclasses.replace(TINY, t_global_rounds=3)
+    sim = BHFLSimulator(s, "hieavg", "temporary", "temporary",
+                        fail_leader_at=2, **KW)
+    r1 = sim.run()
+    r2 = sim.run()
+    np.testing.assert_array_equal(r1.accuracy, r2.accuracy)
+    assert int(sim.chain.alive.sum()) == sim.N - 1  # exactly one crash
+    assert r2.chain_valid
+
+
+def test_run_sweep_matches_single_runs():
+    """One vmapped grid call reproduces the individual engine runs."""
+    from repro.fl import run_sweep
+
+    sw = run_sweep(TINY, seeds=(0, 1),
+                   overrides=[{"straggler_frac": 0.2}], **KW)
+    assert sw.accuracy.shape == (2, TINY.t_global_rounds)
+    for p, (_, seed) in enumerate(sw.points):
+        r = BHFLSimulator(TINY, "hieavg", "temporary", "temporary",
+                          seed=seed, **KW).run()
+        np.testing.assert_allclose(sw.accuracy[p], r.accuracy, atol=1e-6)
+        np.testing.assert_allclose(sw.loss[p], r.loss, rtol=1e-5, atol=1e-6)

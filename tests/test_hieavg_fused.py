@@ -1,0 +1,143 @@
+"""``_mix_and_update`` (fused aggregate + history update) must agree with
+the composed reference path ``_mix`` + ``update_history``, and the batched
+(vmapped, validity-masked) entry points must agree with the per-edge API."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hieavg
+
+
+def stacked(n, shapes=((3, 4), (5,)), seed=0, scale=1.0):
+    ks = jax.random.split(jax.random.key(seed), len(shapes))
+    return {f"p{i}": jax.random.normal(k, (n,) + s) * scale
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+def tree_close(a, b, **kw):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb), **kw)
+
+
+def warmed_history(n, seed=0):
+    """Two observed rounds so delta stats are non-trivial."""
+    w0 = stacked(n, seed=seed)
+    hist = hieavg.init_history(w0)
+    w1 = stacked(n, seed=seed + 1)
+    hist = hieavg.update_history(hist, w1, jnp.ones(n, bool))
+    return hist
+
+
+@pytest.mark.parametrize("normalize", [False, True])
+@pytest.mark.parametrize("mask", [(True,) * 4, (True, False, True, False),
+                                  (False,) * 4])
+def test_fused_matches_composed(normalize, mask):
+    n = 4
+    hist = warmed_history(n)
+    w = stacked(n, seed=7)
+    m = jnp.asarray(mask)
+    pw = jnp.full((n,), 1.0 / n, jnp.float32)
+
+    agg_ref = hieavg._mix(w, m, hist, pw, 0.9, 0.8, normalize)
+    hist_ref = hieavg.update_history(hist, w, m)
+    agg, hist_new = hieavg._mix_and_update(w, m, hist, pw, 0.9, 0.8,
+                                           normalize)
+
+    tree_close(agg, agg_ref, rtol=1e-5, atol=1e-6)
+    tree_close(hist_new.prev_w, hist_ref.prev_w, rtol=1e-5, atol=1e-6)
+    tree_close(hist_new.delta_mean, hist_ref.delta_mean, rtol=1e-5,
+               atol=1e-6)
+    np.testing.assert_allclose(hist_new.n_obs, hist_ref.n_obs)
+    np.testing.assert_allclose(hist_new.miss_count, hist_ref.miss_count)
+
+
+def test_multi_round_consecutive_miss_decay():
+    """Fused and composed paths stay in lockstep over consecutive misses,
+    and the straggler slot's decay factor follows gamma0 * lam**k'."""
+    n, g0, lam = 3, 0.9, 0.7
+    hist_f = warmed_history(n)
+    hist_c = warmed_history(n)
+    pw = jnp.full((n,), 1.0 / n, jnp.float32)
+    for rnd in range(1, 5):
+        w = stacked(n, seed=10 + rnd)
+        m = jnp.asarray([False, True, True])   # participant 0 keeps missing
+        agg_f, hist_f = hieavg._mix_and_update(w, m, hist_f, pw, g0, lam,
+                                               False)
+        agg_c = hieavg._mix(w, m, hist_c, pw, g0, lam, False)
+        hist_c = hieavg.update_history(hist_c, w, m)
+        tree_close(agg_f, agg_c, rtol=1e-5, atol=1e-6)
+        assert float(hist_f.miss_count[0]) == rnd  # k' grows per missed round
+        assert float(hist_f.miss_count[1]) == 0.0
+
+
+def test_multi_round_decay_normalized():
+    """Same lockstep under normalize=True (affine-combination mode)."""
+    n = 3
+    hist_f, hist_c = warmed_history(n, seed=3), warmed_history(n, seed=3)
+    pw = jnp.full((n,), 1.0 / n, jnp.float32)
+    for rnd in range(1, 4):
+        w = stacked(n, seed=20 + rnd)
+        m = jnp.asarray([False, False, True])
+        agg_f, hist_f = hieavg._mix_and_update(w, m, hist_f, pw, 0.9, 0.9,
+                                               True)
+        agg_c = hieavg._mix(w, m, hist_c, pw, 0.9, 0.9, True)
+        hist_c = hieavg.update_history(hist_c, w, m)
+        tree_close(agg_f, agg_c, rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------- batched entry API
+def test_edge_aggregate_batched_matches_per_edge():
+    """vmapped dense aggregation == looped per-edge ``edge_aggregate``."""
+    n_edges, j = 3, 4
+    w = {"p": jax.random.normal(jax.random.key(0), (n_edges, j, 2, 3))}
+    mask = jax.random.bernoulli(jax.random.key(1), 0.6, (n_edges, j))
+    hist_b = hieavg.init_history_batched(w)
+    # warm one observed round
+    w1 = {"p": jax.random.normal(jax.random.key(2), (n_edges, j, 2, 3))}
+    hist_b = hieavg.update_history_batched(hist_b, w1, jnp.ones((n_edges, j),
+                                                                bool))
+    valid = jnp.ones((n_edges, j), bool)
+    agg_b, new_b = hieavg.edge_aggregate_batched(w1, mask, hist_b, valid,
+                                                 0.9, 0.9)
+    for e in range(n_edges):
+        we = {"p": w1["p"][e]}
+        he = jax.tree.map(lambda x: x[e], hist_b)
+        agg_e, new_e = hieavg.edge_aggregate(we, mask[e], he)
+        tree_close({"p": agg_b["p"][e]}, agg_e, rtol=1e-5, atol=1e-6)
+        tree_close(jax.tree.map(lambda x: x[e], new_b), new_e, rtol=1e-5,
+                   atol=1e-6)
+
+
+def test_edge_aggregate_batched_padding_is_inert():
+    """Padded slots (valid=False) must not change the real slots' result."""
+    n_edges, j = 2, 3
+    w_r = {"p": jax.random.normal(jax.random.key(0), (n_edges, j, 5))}
+    mask_r = jnp.asarray([[True, False, True], [True, True, False]])
+    hist_r = hieavg.init_history_batched(w_r)
+    valid_r = jnp.ones((n_edges, j), bool)
+    agg_r, _ = hieavg.edge_aggregate_batched(w_r, mask_r, hist_r, valid_r,
+                                             0.9, 0.9)
+    # same data embedded in a wider padded layout with garbage in the pad
+    pad = 99.0 * jnp.ones((n_edges, 2, 5))
+    w_p = {"p": jnp.concatenate([w_r["p"], pad], axis=1)}
+    mask_p = jnp.concatenate(
+        [mask_r, jnp.zeros((n_edges, 2), bool)], axis=1)
+    valid_p = jnp.concatenate(
+        [valid_r, jnp.zeros((n_edges, 2), bool)], axis=1)
+    hist_p = hieavg.init_history_batched(w_p)
+    agg_p, _ = hieavg.edge_aggregate_batched(w_p, mask_p, hist_p, valid_p,
+                                             0.9, 0.9)
+    tree_close(agg_p, agg_r, rtol=1e-5, atol=1e-6)
+
+
+def test_edge_aggregate_cold_batched_masked_mean():
+    n_edges, j = 2, 4
+    w = {"p": jax.random.normal(jax.random.key(5), (n_edges, j, 3))}
+    valid = jnp.asarray([[True, True, True, False],
+                         [True, True, False, False]])
+    agg = hieavg.edge_aggregate_cold_batched(w, valid)
+    for e, je in enumerate((3, 2)):
+        np.testing.assert_allclose(
+            np.asarray(agg["p"][e]),
+            np.asarray(jnp.mean(w["p"][e, :je], axis=0)), rtol=1e-5)

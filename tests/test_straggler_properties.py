@@ -1,0 +1,67 @@
+"""Property-style invariants of the straggler schedules (Sec. 2.4, 6.1.2)
+and of the dense stacking used by the batched engine."""
+import numpy as np
+from _hypothesis_compat import given, settings, st
+
+from repro.core import straggler
+
+
+@settings(max_examples=20, deadline=None)
+@given(rounds=st.integers(5, 40), n=st.integers(2, 12),
+       k=st.integers(1, 4), seed=st.integers(0, 99))
+def test_temporary_miss_always_followed_by_submission(rounds, n, k, seed):
+    m = straggler.temporary(rounds, n, min(k, n), seed=seed)
+    miss = ~m
+    # "continue to submit in the next round after the missing round"
+    assert not (miss[:-1] & miss[1:]).any()
+
+
+@settings(max_examples=20, deadline=None)
+@given(rounds=st.integers(5, 40), n=st.integers(2, 12),
+       k=st.integers(1, 4), seed=st.integers(0, 99),
+       cold=st.integers(1, 3))
+def test_temporary_cold_boot_rounds_never_missed(rounds, n, k, seed, cold):
+    m = straggler.temporary(rounds, n, min(k, n), seed=seed,
+                            cold_boot_rounds=cold)
+    assert m[:cold].all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(rounds=st.integers(6, 40), n=st.integers(2, 12),
+       k=st.integers(1, 4), seed=st.integers(0, 99),
+       stop=st.integers(1, 5))
+def test_permanent_never_returns_after_stop_round(rounds, n, k, seed, stop):
+    k = min(k, n)
+    m = straggler.permanent(rounds, n, k, stop_round=stop, seed=seed)
+    assert m[:stop].all(), "no one straggles before stop_round"
+    cols = ~m[stop:]
+    assert cols.all(axis=0).sum() == k, "exactly k permanent stragglers"
+    # a permanent straggler never submits again: each column is all-miss
+    # or all-submit after stop_round
+    per_col = cols.any(axis=0) == cols.all(axis=0)
+    assert per_col.all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 50))
+def test_stack_ragged_layout(seed):
+    rng = np.random.default_rng(seed)
+    js = [int(rng.integers(1, 6)) for _ in range(4)]
+    scheds = [straggler.temporary(12, j, max(j // 2, 1), seed=seed + i)
+              for i, j in enumerate(js)]
+    dense, valid = straggler.stack_ragged(scheds)
+    assert dense.shape == (12, 4, max(js)) and valid.shape == (4, max(js))
+    for e, j in enumerate(js):
+        assert valid[e, :j].all() and not valid[e, j:].any()
+        np.testing.assert_array_equal(dense[:, e, :j], scheds[e])
+        assert not dense[:, e, j:].any(), "padded slots read as stragglers"
+
+
+def test_stack_ragged_rejects_mismatched_rounds():
+    a = straggler.no_stragglers(5, 2)
+    b = straggler.no_stragglers(6, 2)
+    try:
+        straggler.stack_ragged([a, b])
+    except ValueError:
+        return
+    raise AssertionError("expected ValueError for mismatched round counts")
