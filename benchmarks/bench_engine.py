@@ -21,12 +21,11 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 
 from repro.configs.bhfl_cnn import REDUCED
 from repro.fl import BHFLSimulator, run_sweep
 
-from .common import Csv
+from .common import Csv, best_of
 
 T_ROUNDS = 20
 KW = dict(n_train=2000, n_test=400, steps_per_epoch=1, normalize=True)
@@ -42,25 +41,14 @@ def _sim(**kw):
                          **KW, **kw)
 
 
-def _best(fn) -> float:
-    fn()                                   # warm-up: compile + caches
-    return min(_timed(fn) for _ in range(REPS))
-
-
-def _timed(fn) -> float:
-    t0 = time.time()
-    fn()
-    return time.time() - t0
-
-
 def main(emit_json: bool = True) -> dict:
     csv = Csv("bench_engine")
     csv.row("path", "seconds", "rounds_per_sec")
 
-    t_legacy = _best(lambda: _sim().run_legacy())
+    t_legacy = best_of(lambda: _sim().run_legacy(), REPS)
     csv.row("legacy_loop", f"{t_legacy:.2f}", f"{T_ROUNDS / t_legacy:.2f}")
 
-    t_engine = _best(lambda: _sim().run())
+    t_engine = best_of(lambda: _sim().run(), REPS)
     csv.row("jitted_engine", f"{t_engine:.2f}", f"{T_ROUNDS / t_engine:.2f}")
 
     # Fig. 3-style grid: 2 straggler fractions x 2 seeds, one batched call
@@ -75,9 +63,9 @@ def main(emit_json: bool = True) -> dict:
                               "temporary", "temporary", seed=seed,
                               **KW).run_legacy()
 
-    t_sweep_legacy = _best(sweep_legacy)
-    t_sweep_engine = _best(lambda: run_sweep(
-        _setting(), seeds=seeds, overrides=overrides, **KW))
+    t_sweep_legacy = best_of(sweep_legacy, REPS)
+    t_sweep_engine = best_of(lambda: run_sweep(
+        _setting(), seeds=seeds, overrides=overrides, **KW), REPS)
     sweep_rounds = n_pts * T_ROUNDS
     csv.row("legacy_4pt_sweep", f"{t_sweep_legacy:.2f}",
             f"{sweep_rounds / t_sweep_legacy:.2f}")

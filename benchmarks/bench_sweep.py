@@ -1,0 +1,166 @@
+"""Sweep-fabric throughput — writes ``BENCH_sweep.json``.
+
+Measures points/sec for the same REDUCED 4-point *shape-changing* grid
+(topology varies per point — impossible to batch before the sweep fabric)
+driven four ways:
+
+  * ``legacy_loop``     — one ``BHFLSimulator.run_legacy`` per point
+                          (the original per-edge Python loop),
+  * ``engine_per_point``— one compiled ``BHFLSimulator.run`` per point
+                          (each point its own shapes, own compile),
+  * ``vmap``            — the fabric's single-device path: all points
+                          padded + stacked, one ``vmap(run_engine)`` call,
+  * ``sharded``         — the fabric's ``shard_map`` path over the mesh
+                          ``data`` axis (measured in a 4-host-device
+                          subprocess via ``--xla_force_host_platform_
+                          device_count``; the vmap path is re-measured
+                          there so the two are compared on equal devices).
+
+Timings are best-of-``REPS`` after a warm-up run (jit caches hot), like
+``bench_engine``.  The grid is intentionally small (T=10, 1 local step) so
+the numbers track orchestration + padding overhead, not training FLOPs.
+
+  PYTHONPATH=src python -m benchmarks.run --only sweep --emit-json
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+from repro.configs.bhfl_cnn import REDUCED
+
+from .common import Csv, best_of
+
+T_ROUNDS = 10
+KW = dict(n_train=1500, n_test=300, steps_per_epoch=1, normalize=True)
+REPS = 2
+N_CHILD_DEVICES = 4
+_CHILD_ENV = "BENCH_SWEEP_CHILD"
+_CHILD_MARK = "BENCH_SWEEP_CHILD_JSON:"
+
+# a shape-changing grid: every point has a different topology/round count
+OVERRIDES = [
+    {"n_edges": 3},
+    {"n_edges": 5},
+    {"j_per_edge": 3},
+    {"k_edge_rounds": 1},
+]
+
+
+def _setting():
+    return dataclasses.replace(REDUCED, t_global_rounds=T_ROUNDS)
+
+
+def _measure(placement: str) -> float:
+    from repro.fl import run_sweep
+    return best_of(lambda: run_sweep(_setting(), overrides=OVERRIDES,
+                                     placement=placement, **KW), REPS)
+
+
+def _child_main() -> None:
+    """Runs inside the forced-4-host-device subprocess."""
+    import jax
+    t_vmap = _measure("vmap")
+    t_shard = _measure("shard")
+    print(_CHILD_MARK + json.dumps({
+        "devices": len(jax.devices()),
+        "vmap_seconds": t_vmap,
+        "sharded_seconds": t_shard,
+    }))
+
+
+def _spawn_child() -> dict | None:
+    env = dict(os.environ)
+    env[_CHILD_ENV] = "1"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " --xla_force_host_"
+                        f"platform_device_count={N_CHILD_DEVICES}").strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-m", "benchmarks.bench_sweep"],
+            capture_output=True, text=True, env=env, timeout=1200)
+    except subprocess.TimeoutExpired:
+        sys.stderr.write("# bench_sweep: 4-device child timed out; "
+                         "emitting single-device numbers only\n")
+        return None
+    for line in proc.stdout.splitlines():
+        if line.startswith(_CHILD_MARK):
+            return json.loads(line[len(_CHILD_MARK):])
+    sys.stderr.write(proc.stdout + proc.stderr)
+    return None
+
+
+def main(emit_json: bool = True) -> dict:
+    if os.environ.get(_CHILD_ENV) == "1":
+        _child_main()
+        return {}
+
+    from repro.fl import BHFLSimulator
+
+    csv = Csv("bench_sweep")
+    csv.row("path", "devices", "seconds", "points_per_sec")
+    n_pts = len(OVERRIDES)
+
+    def per_point(method):
+        for ov in OVERRIDES:
+            sim = BHFLSimulator(dataclasses.replace(_setting(), **ov),
+                                "hieavg", "temporary", "temporary", **KW)
+            getattr(sim, method)()
+
+    t_legacy = best_of(lambda: per_point("run_legacy"), REPS)
+    csv.row("legacy_loop", 1, f"{t_legacy:.2f}", f"{n_pts / t_legacy:.2f}")
+    t_point = best_of(lambda: per_point("run"), REPS)
+    csv.row("engine_per_point", 1, f"{t_point:.2f}",
+            f"{n_pts / t_point:.2f}")
+    t_vmap = _measure("vmap")
+    csv.row("vmap", 1, f"{t_vmap:.2f}", f"{n_pts / t_vmap:.2f}")
+
+    child = _spawn_child()
+    if child is not None:
+        csv.row("vmap", child["devices"], f"{child['vmap_seconds']:.2f}",
+                f"{n_pts / child['vmap_seconds']:.2f}")
+        csv.row("sharded", child["devices"],
+                f"{child['sharded_seconds']:.2f}",
+                f"{n_pts / child['sharded_seconds']:.2f}")
+
+    out = {
+        "setting": "REDUCED",
+        "grid": OVERRIDES,
+        "t_global_rounds": T_ROUNDS,
+        "steps_per_epoch": KW["steps_per_epoch"],
+        "reps": REPS,
+        "points": n_pts,
+        "legacy_points_per_sec": round(n_pts / t_legacy, 3),
+        "engine_per_point_points_per_sec": round(n_pts / t_point, 3),
+        "vmap_points_per_sec": round(n_pts / t_vmap, 3),
+        "vmap_speedup_vs_legacy": round(t_legacy / t_vmap, 2),
+    }
+    if child is not None:
+        out.update({
+            "child_devices": child["devices"],
+            "vmap_points_per_sec_4dev": round(
+                n_pts / child["vmap_seconds"], 3),
+            "sharded_points_per_sec_4dev": round(
+                n_pts / child["sharded_seconds"], 3),
+            "sharded_speedup_vs_legacy": round(
+                t_legacy / child["sharded_seconds"], 2),
+            "sharded_speedup_vs_vmap_4dev": round(
+                child["vmap_seconds"] / child["sharded_seconds"], 2),
+        })
+    if emit_json:
+        with open("BENCH_sweep.json", "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote BENCH_sweep.json (vmap "
+              f"{out['vmap_speedup_vs_legacy']}x vs legacy"
+              + (f", sharded {out['sharded_speedup_vs_legacy']}x"
+                 if child is not None else "") + ")")
+    csv.done()
+    return out
+
+
+if __name__ == "__main__":
+    main()

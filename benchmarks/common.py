@@ -48,6 +48,21 @@ def sim_kwargs(**kw) -> dict:
     return out
 
 
+def best_of(fn, reps: int = 3) -> float:
+    """Warm-up once (jit caches hot), then best-of-``reps`` wall seconds.
+
+    The shared timing methodology for every BENCH_*.json artifact — change
+    it here, not per-bench, so the numbers stay comparable.
+    """
+    fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best
+
+
 class Csv:
     def __init__(self, name: str):
         self.name = name

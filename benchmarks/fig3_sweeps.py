@@ -1,15 +1,16 @@
 """Fig. 3 — parameter sweeps (J devices, N edges, K edge rounds, straggler
 count) on HieAvg with temporary stragglers.
 
-Runs on the fully-jitted batched engine.  Shape-preserving sweeps (the
-straggler fraction) execute as ONE ``run_sweep`` vmapped call; the J/N/K
-sweeps change array shapes per point, so each point is its own compiled
-engine run (``BHFLSimulator.run``)."""
+Runs on the sweep fabric (``repro.fl.sweep``): the J/N/K sweeps change
+array shapes per point, which used to force one compiled engine run per
+point — the planner now pads every point to the grid max, so the WHOLE
+figure (topology + straggler-fraction grid) executes as ONE compiled call,
+sharded over the device mesh when the point count divides it."""
 from __future__ import annotations
 
-from repro.fl import BHFLSimulator, run_sweep
+from repro.fl import run_sweep
 
-from .common import FULL, Csv, setting, sim_kwargs
+from .common import Csv, setting, sim_kwargs
 
 
 def main() -> dict:
@@ -17,30 +18,28 @@ def main() -> dict:
     csv = Csv("fig3_sweeps")
     csv.row("param", "value", "final_acc", "best_acc")
 
-    def emit(name, value, acc):
+    # one padded grid: every row of Fig. 3 is a point of the same call.
+    # steps_per_epoch=None -> one epoch over each device's own shard
+    # (paper Sec. 6.1.5) so J/N sweeps hold the total data budget fixed;
+    # the planner pads the per-point step counts to the grid max.
+    grid = [("J_devices", "j_per_edge", (3, 5, 8)),
+            ("N_edges", "n_edges", (3, 5, 8)),
+            ("K_edge_rounds", "k_edge_rounds", (1, 2, 4)),
+            ("straggler_frac", "straggler_frac", (0.2, 0.4))]
+    names, overrides = [], []
+    for name, field, values in grid:
+        for v in values:
+            names.append((name, v))
+            overrides.append({field: v})
+
+    sw = run_sweep(setting(), overrides=overrides,
+                   **sim_kwargs(steps_per_epoch=None))
+    if len(sw.points) != len(names):       # single seed: 1 point per row
+        raise RuntimeError("fig3 grid points and row labels diverged")
+    for p, (name, value) in enumerate(names):
+        acc, _, _ = sw.trajectory(p)
         csv.row(name, value, f"{acc[-1]:.4f}", f"{acc.max():.4f}")
         out[(name, value)] = acc
-
-    def run(name, value, s, **kw):
-        # steps_per_epoch=None -> one epoch over each device's own shard
-        # (paper Sec. 6.1.5) so J/N sweeps hold the total data budget fixed
-        r = BHFLSimulator(s, "hieavg", "temporary", "temporary",
-                          **sim_kwargs(steps_per_epoch=None, **kw)).run()
-        emit(name, value, r.accuracy)
-
-    for j in ((3, 5, 8) if FULL else (3, 5, 8)):
-        run("J_devices", j, setting(j_per_edge=j))
-    for n in (3, 5, 8):
-        run("N_edges", n, setting(n_edges=n))
-    for k in (1, 2, 4):
-        run("K_edge_rounds", k, setting(k_edge_rounds=k))
-
-    # straggler-fraction sweep: same shapes at every point -> one batched call
-    fracs = (0.2, 0.4)
-    sw = run_sweep(setting(), overrides=[{"straggler_frac": f} for f in fracs],
-                   **sim_kwargs(steps_per_epoch=None))
-    for p, (ov, _seed) in enumerate(sw.points):
-        emit("straggler_frac", ov["straggler_frac"], sw.accuracy[p])
     csv.done()
     return out
 

@@ -1,13 +1,13 @@
 """Fig. 4 — data-distribution heterogeneity (classes per device) and
 inconsistent numbers of local devices per edge.
 
-Runs on the fully-jitted batched engine: the classes-per-device sweep is
-shape-preserving, so it executes as ONE ``run_sweep`` vmapped call; the
-inconsistent-J comparison swaps aggregators (a static program branch) and
-runs one compiled engine call each."""
+Runs on the sweep fabric: the classes-per-device grid is one batched call;
+the inconsistent-J comparison feeds the ragged per-edge device list through
+the planner (one call per aggregator — the aggregator is a static program
+branch, not sweep data)."""
 from __future__ import annotations
 
-from repro.fl import BHFLSimulator, run_sweep
+from repro.fl import run_sweep
 
 from .common import Csv, setting, sim_kwargs
 
@@ -27,14 +27,16 @@ def main() -> dict:
                 f"{acc[-1]:.4f}", f"{acc.max():.4f}")
         out[("classes", ov["classes_per_device"])] = acc
 
-    # inconsistent J_i (Fig. 4b): HieAvg vs the benchmarks
+    # inconsistent J_i (Fig. 4b): HieAvg vs the benchmarks — the ragged
+    # [3..7] device list rides through the planner's j_per_edge padding
     j_mix = [3, 4, 5, 6, 7]
     for agg in ("hieavg", "t_fedavg", "d_fedavg"):
-        r = BHFLSimulator(setting(), agg, "temporary", "temporary",
-                          j_per_edge=j_mix, **sim_kwargs()).run()
-        csv.row("inconsistent_J", "3-7", agg, f"{r.accuracy[-1]:.4f}",
-                f"{r.accuracy.max():.4f}")
-        out[("inconsistent", agg)] = r.accuracy
+        sw = run_sweep(setting(), overrides=[{"j_per_edge": j_mix}],
+                       aggregator=agg, **sim_kwargs())
+        acc = sw.accuracy[0]
+        csv.row("inconsistent_J", "3-7", agg, f"{acc[-1]:.4f}",
+                f"{acc.max():.4f}")
+        out[("inconsistent", agg)] = acc
     csv.done()
     return out
 

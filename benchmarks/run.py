@@ -11,9 +11,9 @@ import argparse
 import functools
 import time
 
-from . import (ablations, bench_engine, fig2_convergence, fig3_sweeps,
-               fig4_heterogeneity, fig56_single_layer, fig7_latency,
-               kernel_bench, roofline)
+from . import (ablations, bench_engine, bench_sweep, fig2_convergence,
+               fig3_sweeps, fig4_heterogeneity, fig56_single_layer,
+               fig7_latency, kernel_bench, roofline)
 
 SUITES = {
     "fig2": fig2_convergence.main,
@@ -25,6 +25,7 @@ SUITES = {
     "kernels": kernel_bench.main,
     "roofline": lambda: roofline.main([]),
     "engine": bench_engine.main,
+    "sweep": bench_sweep.main,
 }
 
 
@@ -33,12 +34,14 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
     ap.add_argument("--emit-json", action="store_true",
-                    help="write BENCH_engine.json (engine suite)")
+                    help="write BENCH_*.json (engine/sweep suites)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
     suites = dict(SUITES)
     suites["engine"] = functools.partial(bench_engine.main,
                                          emit_json=args.emit_json)
+    suites["sweep"] = functools.partial(bench_sweep.main,
+                                        emit_json=args.emit_json)
     t0 = time.time()
     for name in names:
         suites[name]()

@@ -1,9 +1,12 @@
 """Multi-seed / multi-fraction grids as ONE batched engine call.
 
-Fig. 3-style sweeps used to loop the simulator point by point; the jitted
-engine's ``run_sweep`` stacks every grid point's precomputed inputs
-(schedules, batch indices, decay factors) and vmaps the whole grid through
-one compiled program — no per-point dispatch, no re-trace.
+Fig. 3-style sweeps used to loop the simulator point by point; the sweep
+fabric (``repro.fl.sweep``) plans every grid point's precomputed inputs
+(schedules, batch indices, decay factors) into one stacked array pytree and
+runs the whole grid through one compiled program — sharded across the
+device mesh when the point count divides it, plain ``vmap`` otherwise.
+Shape-preserving grids like this one need no padding; see
+``examples/sweep_topology.py`` for grids that change the topology itself.
 
   PYTHONPATH=src python examples/sweep_grid.py
 """
@@ -27,4 +30,4 @@ for p, (ov, seed) in enumerate(grid.points):
     acc = grid.accuracy[p]
     print(f"{str(ov):28s} s={seed}  {acc[-1]:.4f}     {acc.max():.4f}")
 print(f"\n{len(grid.points)} runs x {setting.t_global_rounds} rounds "
-      f"in one vmapped call; {int(grid.blocks.sum())} blocks committed.")
+      f"in one compiled call; {int(grid.blocks.sum())} blocks committed.")

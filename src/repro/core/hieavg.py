@@ -71,8 +71,9 @@ def init_history(stacked_w: PyTree, dtype=None) -> History:
 
     ``dtype`` overrides the history storage dtype — a beyond-paper knob:
     HieAvg's intrinsic memory cost is two extra model copies per hierarchy
-    layer; ``jnp.float8_e4m3fn`` halves it (EXPERIMENTS.md §Perf, X1).
-    All estimation math stays f32 regardless (update_history casts).
+    layer; bf16 cuts it 2× for free, ``jnp.float8_e4m3fn`` 4× at an
+    accuracy cost (EXPERIMENTS.md §Perf, X1).  All estimation math stays
+    f32 regardless (update_history casts).
     """
     leaves = jax.tree_util.tree_leaves(stacked_w)
     n = leaves[0].shape[0]
@@ -265,13 +266,22 @@ def aggregate(stacked_w: PyTree, mask: jnp.ndarray, history: History,
 # slots get part-weight 0 so they contribute exactly nothing to the mix, and
 # their history entries are dead state that is never read back.
 
-def init_history_batched(stacked_w: PyTree) -> History:
-    """Cold-boot history for dense [N, J, ...] stacked weights."""
+def init_history_batched(stacked_w: PyTree, dtype=None) -> History:
+    """Cold-boot history for dense [N, J, ...] stacked weights.
+
+    ``dtype`` mirrors ``init_history``'s storage-dtype knob (EXPERIMENTS.md
+    X1): histories are two extra model copies per participant per layer;
+    bf16 storage cuts that 2× at no measured accuracy cost, f8 4× with an
+    accuracy penalty.  The estimation math stays f32 either way.
+    """
     leaves = jax.tree_util.tree_leaves(stacked_w)
     n, j = leaves[0].shape[:2]
+    cast = (lambda x: jnp.asarray(x, dtype)) if dtype is not None \
+        else jnp.asarray
     return History(
-        prev_w=jax.tree.map(jnp.asarray, stacked_w),
-        delta_mean=jax.tree.map(jnp.zeros_like, stacked_w),
+        prev_w=jax.tree.map(cast, stacked_w),
+        delta_mean=jax.tree.map(lambda x: jnp.zeros(x.shape, dtype or x.dtype),
+                                stacked_w),
         n_obs=jnp.zeros((n, j), jnp.float32),
         miss_count=jnp.zeros((n, j), jnp.float32),
     )
@@ -318,8 +328,15 @@ def edge_aggregate_cold(stacked_w: PyTree) -> PyTree:
 
 @jax.jit
 def global_aggregate_cold(stacked_w: PyTree, j_per_edge: jnp.ndarray) -> PyTree:
-    """Eq. (3) during cold boot — J_i-weighted mean over edge models."""
-    pw = j_per_edge.astype(jnp.float32) / jnp.sum(j_per_edge)
+    """Eq. (3) during cold boot — J_i-weighted mean over edge models.
+
+    An all-zero ``j_per_edge`` (a sweep-fabric padded edge whose slots are
+    all invalid) aggregates to exact zeros instead of dividing by zero —
+    the padded edge model must stay finite so its downstream zero-weight
+    contributions are true no-ops.
+    """
+    pw = j_per_edge.astype(jnp.float32) \
+        / jnp.maximum(jnp.sum(j_per_edge), 1e-12)
 
     def agg(w):
         return jnp.sum(_bshape(pw, w) * w, axis=0)

@@ -49,8 +49,8 @@ def temporary(rounds: int, n: int, n_stragglers: int, miss_prob: float = 0.5,
     return mask
 
 
-def stack_ragged(schedules: list[np.ndarray], j_max: int | None = None
-                 ) -> tuple[np.ndarray, np.ndarray]:
+def stack_ragged(schedules: list[np.ndarray], j_max: int | None = None,
+                 n_max: int | None = None) -> tuple[np.ndarray, np.ndarray]:
     """Stack per-edge ragged schedules into one dense device-layer tensor.
 
     ``schedules``: per-edge boolean arrays ``[rounds, J_e]`` (the output of
@@ -59,11 +59,20 @@ def stack_ragged(schedules: list[np.ndarray], j_max: int | None = None
     they carry zero aggregation weight anyway) and ``valid`` is ``[N, J_max]``
     marking real device slots.  This is the layout the jitted engine consumes:
     one gather instead of N ragged slices per round.
+
+    ``j_max`` / ``n_max`` pad the device and edge dimensions past this
+    deployment's own extents — the sweep fabric stacks grids whose points
+    disagree on topology by padding every point to the grid maximum.  A
+    padded edge is a fully-invalid row: all its slots read False in both
+    ``dense`` and ``valid``, so it carries zero aggregation weight
+    everywhere downstream.
     """
     rounds = schedules[0].shape[0]
     if any(s.shape[0] != rounds for s in schedules):
         raise ValueError("all per-edge schedules need the same round count")
-    n = len(schedules)
+    n = n_max if n_max is not None else len(schedules)
+    if len(schedules) > n:
+        raise ValueError(f"{len(schedules)} edges > n_max={n}")
     jm = j_max if j_max is not None else max(s.shape[1] for s in schedules)
     dense = np.zeros((rounds, n, jm), dtype=bool)
     valid = np.zeros((n, jm), dtype=bool)

@@ -11,13 +11,23 @@ of Markov chains so there is learnable next-token structure.
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
 
+@functools.lru_cache(maxsize=8)
 def class_images(n: int, seed: int = 0, hw: int = 28, n_classes: int = 10,
                  noise: float = 0.2, shift: int = 2
                  ) -> tuple[np.ndarray, np.ndarray]:
-    """Returns (images [n, hw, hw, 1] float32 in [0,1]-ish, labels [n])."""
+    """Returns (images [n, hw, hw, 1] float32 in [0,1]-ish, labels [n]).
+
+    Memoized: generation is a Python loop over n samples, and the sweep
+    planner constructs one simulator per grid point — same-seed grids
+    would otherwise regenerate the identical dataset P times.  The cached
+    arrays are read-only so shared references cannot be corrupted; callers
+    that need to write must copy.
+    """
     rng = np.random.default_rng(seed)
     protos = rng.uniform(0.0, 1.0, size=(n_classes, hw, hw)).astype(np.float32)
     # smooth the prototypes so classes differ at low frequencies (digit-like)
@@ -33,7 +43,10 @@ def class_images(n: int, seed: int = 0, hw: int = 28, n_classes: int = 10,
     for i in range(n):  # per-sample shift (vectorizing not worth it at our n)
         imgs[i] = np.roll(np.roll(imgs[i], dx[i], 0), dy[i], 1)
     imgs += rng.normal(0.0, noise, size=imgs.shape).astype(np.float32)
-    return imgs[..., None], labels.astype(np.int32)
+    imgs, labels = imgs[..., None], labels.astype(np.int32)
+    imgs.flags.writeable = False
+    labels.flags.writeable = False
+    return imgs, labels
 
 
 def lm_tokens(n_seqs: int, seq_len: int, vocab: int, seed: int = 0

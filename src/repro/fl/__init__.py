@@ -1,7 +1,9 @@
-from .engine import (EngineInputs, SweepResult, build_inputs, run_engine,
-                     run_sweep)
+from .engine import EngineInputs, build_inputs, run_engine
 from .simulator import BHFLSimulator, RunResult, run_comparison
+from .sweep import (SweepPlan, SweepResult, execute_plan, plan_sweep,
+                    run_sweep)
 
 __all__ = ["BHFLSimulator", "RunResult", "run_comparison",
-           "EngineInputs", "SweepResult", "build_inputs", "run_engine",
+           "EngineInputs", "build_inputs", "run_engine",
+           "SweepPlan", "SweepResult", "execute_plan", "plan_sweep",
            "run_sweep"]

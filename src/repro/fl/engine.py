@@ -15,8 +15,12 @@ compiles an ENTIRE run into one program:
   * the K edge rounds and the global aggregation are driven by nested
     ``jax.lax.scan`` — one global round is one fused XLA computation, and the
     T rounds run without returning to Python,
-  * ``run_sweep`` adds a ``vmap`` sweep axis so Fig. 3-style
-    multi-seed/multi-fraction grids execute as a single batched call.
+  * the program is *shape-polymorphic via padding*: ``build_inputs`` can pad
+    every array dim (T/K/N/J/steps) past a deployment's own extents, and
+    ``run_engine`` treats everything padded as a numeric no-op — this is
+    what lets the sweep planner (``repro.fl.sweep``) batch grid points that
+    disagree on topology or round counts into ONE compiled, mesh-sharded
+    call.
 
 The Raft chain (control plane, no model numerics) is replayed host-side
 *before* the jitted run: it consumes the same RNG stream in the same order as
@@ -48,7 +52,9 @@ PyTree = Any
 # --------------------------------------------------------------- local step
 def train_epoch_body(params: PyTree, images: jnp.ndarray,
                      labels: jnp.ndarray, lr: jnp.ndarray,
-                     loss_fn=cnn_loss_fast) -> tuple[PyTree, jnp.ndarray]:
+                     loss_fn=cnn_loss_fast,
+                     step_ok: Optional[jnp.ndarray] = None
+                     ) -> tuple[PyTree, jnp.ndarray]:
     """One local epoch for all devices.  params: stacked [D, ...];
     images: [D, steps, B, H, W, 1]; labels: [D, steps, B]. Returns
     (new stacked params, mean loss per device [D]).
@@ -57,18 +63,33 @@ def train_epoch_body(params: PyTree, images: jnp.ndarray,
     step instead of D separate small ones.  The engine trains with the
     im2col conv (``cnn_loss_fast``); the legacy reference loop keeps the
     shifted-sum conv (same math, different summation order).
+
+    ``step_ok`` (optional, [steps] f32 of 0/1): per-step validity for the
+    sweep fabric, whose grid points may disagree on steps-per-epoch.  A
+    padded step (0) applies no update and is excluded from the mean loss;
+    a real step multiplies lr by 1.0, which is exact in f32, so a fully
+    valid mask is bitwise identical to passing ``None``.
     """
 
     def step(ps, xs):
-        im, lb = xs                                     # [D, B, ...]
+        if step_ok is None:
+            im, lb = xs                                 # [D, B, ...]
+            scale = lr
+        else:
+            im, lb, ok = xs
+            scale = lr * ok
         loss, g = jax.vmap(jax.value_and_grad(loss_fn))(ps, im, lb)
-        ps = jax.tree.map(lambda w, gw: w - lr * gw, ps, g)
+        ps = jax.tree.map(lambda w, gw: w - scale * gw, ps, g)
         return ps, loss
 
     images = jnp.swapaxes(images, 0, 1)                 # [steps, D, ...]
     labels = jnp.swapaxes(labels, 0, 1)
-    params, losses = jax.lax.scan(step, params, (images, labels))
-    return params, jnp.mean(losses, axis=0)
+    if step_ok is None:
+        params, losses = jax.lax.scan(step, params, (images, labels))
+        return params, jnp.mean(losses, axis=0)
+    params, losses = jax.lax.scan(step, params, (images, labels, step_ok))
+    n_ok = jnp.maximum(jnp.sum(step_ok), 1.0)
+    return params, jnp.sum(losses * step_ok[:, None], axis=0) / n_ok
 
 
 # jitted legacy-exact epoch (shifted-sum conv), used by run_legacy
@@ -81,9 +102,17 @@ train_epoch = jax.jit(partial(train_epoch_body, loss_fn=cnn_loss))
 class EngineInputs:
     """Everything a jitted run consumes, as dense device arrays.
 
-    Leaves are stackable across grid points (``run_sweep`` vmaps over a
-    leading point axis); gamma0/lam/t_cold_boot ride along as scalars so
-    decay-factor sweeps are data, not recompiles.
+    Leaves are stackable across grid points (the sweep fabric vmaps or
+    shard_maps over a leading point axis); gamma0/lam/t_cold_boot ride along
+    as scalars so decay-factor sweeps are data, not recompiles.
+
+    The array dims T/K/N/J/steps are *grid maxima* when the inputs were
+    built with pad targets (``build_inputs(..., t_max=...)``): the
+    ``t_valid``/``k_valid``/``n_valid``/``s_valid`` scalars carry each
+    point's real extents, and ``run_engine`` turns everything padded into a
+    numeric no-op — padded device/edge slots get zero aggregation weight
+    (``valid``/``j_arr``), padded edge rounds and global rounds carry the
+    scan state through unchanged, padded SGD steps apply no update.
     """
 
     train_x: jnp.ndarray      # [n_train, H, W, 1] f32
@@ -96,11 +125,18 @@ class EngineInputs:
     valid: jnp.ndarray        # [N, J] bool — real device slots
     dev_masks: jnp.ndarray    # [T, K, N, J] bool submission masks
     edge_masks: jnp.ndarray   # [T, N] bool (failover already applied)
-    lr: jnp.ndarray           # [T, K] f32 paper schedule
-    j_arr: jnp.ndarray        # [N] f32 devices per edge (global weights)
+    lr: jnp.ndarray           # [T, K] f32 paper schedule (0 when padded)
+    j_arr: jnp.ndarray        # [N] f32 devices per edge (0 = padded edge)
     gamma0: jnp.ndarray       # scalar f32
     lam: jnp.ndarray          # scalar f32
     t_cold_boot: jnp.ndarray  # scalar i32
+    t_valid: jnp.ndarray      # scalar i32 — real global rounds (<= T)
+    k_valid: jnp.ndarray      # scalar i32 — real edge rounds (<= K)
+    n_valid: jnp.ndarray      # scalar i32 — real edges (<= N).  Metadata
+    #   for callers/tests: run_engine itself never reads it — padded edges
+    #   are inert purely through their all-False ``valid`` rows and zero
+    #   ``j_arr`` weights.
+    s_valid: jnp.ndarray      # scalar i32 — real SGD steps/epoch (<= steps)
 
 
 def replay_chain(sim) -> None:
@@ -129,24 +165,51 @@ def replay_chain(sim) -> None:
         sim.chain.commit_block(f"edges@t={t}", f"global@t={t}")
 
 
-def build_inputs(sim) -> EngineInputs:
+def build_inputs(sim, *, t_max: Optional[int] = None,
+                 k_max: Optional[int] = None, n_max: Optional[int] = None,
+                 j_max: Optional[int] = None,
+                 steps_max: Optional[int] = None,
+                 share_data_from: Optional[EngineInputs] = None
+                 ) -> EngineInputs:
     """Precompute a ``BHFLSimulator``'s whole run into dense device arrays.
 
     Batch indices are sampled from a fresh ``default_rng(seed)`` in the same
     (round, device) order as the legacy loop's per-round ``_epoch_batches``,
     so a fresh legacy instance and a fresh engine instance see identical
     batches.  Also replays the Raft chain (see ``replay_chain``).
+
+    The ``*_max`` targets pad the emitted arrays past this deployment's own
+    extents — how the sweep planner (``repro.fl.sweep``) stacks grid points
+    that disagree on topology or round counts.  Padding is all-inert:
+    padded rounds get zero lr and all-False masks, padded edges get
+    ``j_arr`` 0 and all-False ``valid`` rows, padded steps index sample 0
+    but are masked out of the SGD update.  The real extents ride along in
+    ``t_valid``/``k_valid``/``n_valid``/``s_valid``.
+
+    ``share_data_from``: reuse another point's train/test/init device
+    buffers instead of converting this sim's own — the sweep planner's
+    same-seed dedup (the caller guarantees the seed and data geometry
+    match, which makes those arrays byte-identical; see
+    ``sweep.SHARED_DATA_FIELDS``).
     """
     s = sim.s
     T, K, N = s.t_global_rounds, s.k_edge_rounds, sim.N
     steps, bs = sim.steps, s.batch_size
+    Tm, Km, Nm = t_max or T, k_max or K, n_max or N
+    Sm = steps_max or steps
+    if (Tm < T or Km < K or Nm < N or Sm < steps
+            or (j_max is not None and j_max < max(sim.j_per_edge))):
+        raise ValueError("pad targets must be >= the deployment's extents")
 
     replay_chain(sim)
 
-    dense_dev, valid = strag.stack_ragged(sim.dev_masks)
+    dense_dev, valid = strag.stack_ragged(sim.dev_masks, j_max=j_max,
+                                          n_max=Nm)
     J = valid.shape[1]
-    dev_masks = dense_dev[:T * K].reshape(T, K, N, J)
-    edge_masks = np.asarray(sim.edge_masks[:T], dtype=bool)
+    dev_masks = np.zeros((Tm, Km, Nm, J), dtype=bool)
+    dev_masks[:T, :K] = dense_dev[:T * K].reshape(T, K, Nm, J)
+    edge_masks = np.zeros((Tm, Nm), dtype=bool)
+    edge_masks[:T, :N] = np.asarray(sim.edge_masks[:T], dtype=bool)
 
     # batch indices in legacy order: per edge-round, per device
     rng = np.random.default_rng(sim.seed)
@@ -159,44 +222,77 @@ def build_inputs(sim) -> EngineInputs:
                 continue
             flat_idx[r, d] = rng.choice(idx, size=(steps, bs), replace=True)
             flat_has[d] = 1.0
-    batch_idx = np.zeros((R, N, J, steps, bs), np.int32)
-    has_data = np.zeros((N, J), np.float32)
+    batch_idx = np.zeros((Tm, Km, Nm, J, Sm, bs), np.int32)
+    has_data = np.zeros((Nm, J), np.float32)
+    rect = flat_idx.reshape(T, K, sim.D, steps, bs)
     d = 0
     for e in range(N):
         for j in range(sim.j_per_edge[e]):
-            batch_idx[:, e, j] = flat_idx[:, d]
+            batch_idx[:T, :K, e, j, :steps] = rect[:, :, d]
             has_data[e, j] = flat_has[d]
             d += 1
 
-    lr = paper_lr(jnp.arange(R), s.lr0, s.lr_decay).reshape(T, K)
-    init_w = init_from_specs(sim.specs, jax.random.key(sim.seed))
+    lr = np.zeros((Tm, Km), np.float32)
+    lr[:T, :K] = np.asarray(
+        paper_lr(jnp.arange(R), s.lr0, s.lr_decay)).reshape(T, K)
+    j_arr = np.zeros((Nm,), np.float32)
+    j_arr[:N] = sim.j_per_edge
+
+    if share_data_from is not None:
+        src = share_data_from
+        train_x, train_y = src.train_x, src.train_y
+        test_x, test_y, init_w = src.test_x, src.test_y, src.init_w
+    else:
+        train_x, train_y = jnp.asarray(sim.train_x), jnp.asarray(sim.train_y)
+        test_x, test_y = jnp.asarray(sim.test_x), jnp.asarray(sim.test_y)
+        init_w = init_from_specs(sim.specs, jax.random.key(sim.seed))
 
     return EngineInputs(
-        train_x=jnp.asarray(sim.train_x), train_y=jnp.asarray(sim.train_y),
-        test_x=sim.test_x, test_y=sim.test_y, init_w=init_w,
-        batch_idx=jnp.asarray(batch_idx.reshape(T, K, N, J, steps, bs)),
+        train_x=train_x, train_y=train_y,
+        test_x=test_x, test_y=test_y, init_w=init_w,
+        batch_idx=jnp.asarray(batch_idx),
         has_data=jnp.asarray(has_data), valid=jnp.asarray(valid),
         dev_masks=jnp.asarray(dev_masks), edge_masks=jnp.asarray(edge_masks),
-        lr=lr, j_arr=jnp.asarray(sim.j_per_edge, jnp.float32),
+        lr=jnp.asarray(lr), j_arr=jnp.asarray(j_arr),
         gamma0=jnp.float32(s.gamma0), lam=jnp.float32(s.lam),
-        t_cold_boot=jnp.int32(s.t_cold_boot))
+        t_cold_boot=jnp.int32(s.t_cold_boot),
+        t_valid=jnp.int32(T), k_valid=jnp.int32(K),
+        n_valid=jnp.int32(N), s_valid=jnp.int32(steps))
 
 
 # ------------------------------------------------------------- jitted run
-@partial(jax.jit, static_argnames=("aggregator", "normalize"))
+@partial(jax.jit, static_argnames=("aggregator", "normalize",
+                                   "history_dtype"))
 def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
-               normalize: bool = False
+               normalize: bool = False, history_dtype=None
                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One whole BHFL run as a single compiled program.
 
     Returns per-global-round (accuracy [T], mean local loss [T],
     global-model round-to-round delta norm [T]).
+
+    Dims past the point's ``t_valid``/``k_valid``/``s_valid`` extents are
+    sweep-fabric padding: a padded edge round or global round computes and
+    then *discards* its result (the scan carry passes through unchanged,
+    which under vmap costs the same as a branch anyway), a padded SGD step
+    applies no update, and padded edge/device slots carry zero aggregation
+    weight via ``valid``/``j_arr``.  Output rounds past ``t_valid`` repeat
+    the final valid global model (accuracy) and report 0 loss/delta.
+
+    ``history_dtype`` overrides HieAvg's history storage dtype end-to-end
+    (EXPERIMENTS.md X1): bf16 cuts the two-model-copies-per-layer memory
+    cost 2× for free, f8 4× at an accuracy cost; estimation math stays f32.
     """
     T, K, N, J = inp.dev_masks.shape
     steps, bs = inp.batch_idx.shape[-2:]
     D = N * J
     v32 = inp.valid.astype(jnp.float32)
     hd = inp.has_data
+    step_ok = (jnp.arange(steps) < inp.s_valid).astype(jnp.float32)
+
+    def passthru(ok, new, old):
+        """Gate a carry update on a traced bool (padding = carry-through)."""
+        return jax.tree.map(lambda a, b: jnp.where(ok, a, b), new, old)
 
     def bcast_edges(tree):   # [...] global -> [N, ...]
         return jax.tree.map(
@@ -214,25 +310,29 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
         return jax.tree.map(lambda x: x.reshape((N, J) + x.shape[1:]), tree)
 
     def global_round(carry, xs):
+        prev_carry = carry
         device_w, ehist, elast, ghist, glast, prev_global = carry
         t, bidx_t, dmask_t, emask, lr_t = xs
 
         # ---- K edge rounds: local epoch + per-edge aggregation + sync
         def edge_round(c, xs_k):
+            prev_c = c
             device_w, ehist, elast = c
-            bidx, dmask, lr, r = xs_k   # [N,J,steps,B], [N,J], scalar, scalar
+            # [N,J,steps,B], [N,J], scalar lr, round counter r, k index
+            bidx, dmask, lr, r, k = xs_k
 
             x = inp.train_x[bidx] * hd[:, :, None, None, None, None, None]
             y = jnp.where(hd[:, :, None, None] > 0, inp.train_y[bidx], 0)
             pflat, loss = train_epoch_body(
                 flat(device_w), x.reshape((D, steps, bs) + x.shape[4:]),
-                y.reshape(D, steps, bs), lr)
+                y.reshape(D, steps, bs), lr, step_ok=step_ok)
             ws = unflat(pflat)
             dev_loss = loss.reshape(N, J)
 
             if aggregator == "hieavg":
                 ehist = jax.lax.cond(
-                    r == 0, lambda h: hieavg.init_history_batched(ws),
+                    r == 0,
+                    lambda h: hieavg.init_history_batched(ws, history_dtype),
                     lambda h: h, ehist)
 
                 def cold(w, m, h):
@@ -256,19 +356,23 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
             else:
                 raise ValueError(f"unknown aggregator {aggregator!r}")
 
-            return (bcast_devices(edge_models), ehist, elast), dev_loss
+            new_c = (bcast_devices(edge_models), ehist, elast)
+            # padded edge round (k >= k_valid): carry passes through
+            return passthru(k < inp.k_valid, new_c, prev_c), dev_loss
 
-        rs = (t - 1) * K + jnp.arange(K)
+        ks = jnp.arange(K)
+        rs = (t - 1) * K + ks
         (device_w, ehist, elast), dev_losses = jax.lax.scan(
             edge_round, (device_w, ehist, elast),
-            (bidx_t, dmask_t, lr_t, rs))
+            (bidx_t, dmask_t, lr_t, rs, ks))
         # after the sync every device slot holds its edge model
         edge_models = jax.tree.map(lambda x: x[:, 0], device_w)
 
         # ---- global aggregation on the (replayed) leader
         if aggregator == "hieavg":
             ghist = jax.lax.cond(
-                t == 1, lambda h: hieavg.init_history(edge_models),
+                t == 1,
+                lambda h: hieavg.init_history(edge_models, history_dtype),
                 lambda h: h, ghist)
             pw = inp.j_arr / jnp.sum(inp.j_arr)
 
@@ -294,20 +398,29 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
         device_w = bcast_devices(bcast_edges(global_w))
 
         # ---- per-round metrics (same definitions as the legacy loop);
-        # test accuracy is evaluated OUTSIDE the scan, batched over rounds
-        loss = jnp.sum(dev_losses[-1] * v32) / jnp.maximum(jnp.sum(v32), 1.0)
+        # test accuracy is evaluated OUTSIDE the scan, batched over rounds.
+        # The last *valid* edge round's losses, not dev_losses[-1]: trailing
+        # K entries may be sweep padding.
+        last_loss = jnp.take(dev_losses, inp.k_valid - 1, axis=0)
+        loss = jnp.sum(last_loss * v32) / jnp.maximum(jnp.sum(v32), 1.0)
         delta = jnp.sqrt(sum(
             jnp.sum(jnp.square(a - b)) for a, b in
             zip(jax.tree.leaves(global_w), jax.tree.leaves(prev_global))))
-        return (device_w, ehist, elast, ghist, glast, global_w), \
-            (global_w, loss, delta)
+
+        # padded global round (t > t_valid): carry passes through, outputs
+        # repeat the final valid global model with zeroed loss/delta
+        t_ok = t <= inp.t_valid
+        out_carry = passthru(t_ok, (device_w, ehist, elast, ghist, glast,
+                                    global_w), prev_carry)
+        return out_carry, (out_carry[5], jnp.where(t_ok, loss, 0.0),
+                           jnp.where(t_ok, delta, 0.0))
 
     edge0 = bcast_edges(inp.init_w)
     dev0 = bcast_devices(edge0)
     carry0 = (dev0,
-              hieavg.init_history_batched(dev0),       # overwritten at r==0
+              hieavg.init_history_batched(dev0, history_dtype),  # @r==0
               jax.tree.map(jnp.zeros_like, dev0),      # d_fedavg last stores
-              hieavg.init_history(edge0),              # overwritten at t==1
+              hieavg.init_history(edge0, history_dtype),         # @t==1
               jax.tree.map(jnp.zeros_like, edge0),
               inp.init_w)
     xs = (jnp.arange(1, T + 1), inp.batch_idx, inp.dev_masks,
@@ -326,52 +439,7 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
 
 
 # ----------------------------------------------------------------- sweeps
-@dataclasses.dataclass
-class SweepResult:
-    """Batched trajectories for a grid of runs (leading axis = grid point)."""
-    points: list              # (overrides dict, seed) per grid point
-    accuracy: np.ndarray      # [P, T]
-    loss: np.ndarray          # [P, T]
-    grad_norm: np.ndarray     # [P, T]
-    sim_latency: np.ndarray   # [P]
-    blocks: np.ndarray        # [P]
-
-
-def run_sweep(setting, seeds=(0,), *, overrides: Optional[list] = None,
-              aggregator: str = "hieavg",
-              device_stragglers: str = "temporary",
-              edge_stragglers: str = "temporary",
-              normalize: bool = False, **sim_kw) -> SweepResult:
-    """Fig. 3-style grids as ONE batched call.
-
-    ``overrides`` is a list of ``BHFLSetting`` field-override dicts (e.g.
-    ``[{"straggler_frac": 0.2}, {"straggler_frac": 0.4}]``), crossed with
-    ``seeds``.  Every grid point is precomputed host-side into
-    ``EngineInputs``; the stacked inputs run as a single
-    ``vmap(run_engine)`` — no per-point dispatch or re-trace.  All points
-    must agree on shape-determining fields (rounds, topology, image size);
-    straggler fractions/kinds, gamma/lambda, cold-boot length, and seeds may
-    vary freely.
-    """
-    from repro.fl.simulator import BHFLSimulator  # lazy: avoid import cycle
-
-    points = [(ov, seed) for ov in (overrides or [{}]) for seed in seeds]
-    sims = [BHFLSimulator(dataclasses.replace(setting, **ov), aggregator,
-                          device_stragglers, edge_stragglers,
-                          normalize=normalize, seed=seed, **sim_kw)
-            for ov, seed in points]
-    inputs = [build_inputs(s) for s in sims]
-    shapes = [jax.tree.map(jnp.shape, i) for i in inputs]
-    if any(s != shapes[0] for s in shapes[1:]):
-        raise ValueError("run_sweep grid points must share all array shapes "
-                         "(rounds, topology, image size, batch schedule)")
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *inputs)
-    accs, losses, deltas = jax.vmap(
-        lambda i: run_engine(i, aggregator=aggregator, normalize=normalize)
-    )(stacked)
-    return SweepResult(
-        points=points,
-        accuracy=np.asarray(accs), loss=np.asarray(losses),
-        grad_norm=np.asarray(deltas),
-        sim_latency=np.asarray([s.paper_latency() for s in sims]),
-        blocks=np.asarray([len(s.chain.blocks) - 1 for s in sims]))
+# The sweep subsystem lives in ``repro.fl.sweep``: a shape-polymorphic
+# planner (grids may change topology/rounds; points are padded to the grid
+# max) plus mesh placement (shard_map over the data axis, vmap fallback).
+# ``run_sweep``/``SweepResult`` are re-exported there and via ``repro.fl``.

@@ -87,18 +87,31 @@ class BHFLSimulator:
                  steps_per_epoch: Optional[int] = None,
                  normalize: bool = False,
                  fail_leader_at: Optional[int] = None,
-                 seed: Optional[int] = None):
+                 seed: Optional[int] = None,
+                 history_dtype=None):
         """``fail_leader_at``: global round at which the current Raft
         leader crashes — the paper's single-point-of-failure scenario.
         The consortium re-elects and training continues (the failed edge
-        also becomes a permanent straggler at the global layer)."""
+        also becomes a permanent straggler at the global layer).
+
+        ``history_dtype``: HieAvg history storage dtype override (engine
+        path only) — straggler estimation keeps two extra model copies
+        per participant per layer; ``jnp.bfloat16`` cuts that 2× at no
+        measured accuracy cost, ``jnp.float8_e4m3fn`` 4× with an accuracy
+        penalty.  The estimation math stays f32.  See EXPERIMENTS.md X1."""
         self.s = setting
         self.aggregator = aggregator
         self.normalize = normalize
+        self.history_dtype = history_dtype
         self.fail_leader_at = fail_leader_at
         self.seed = setting.seed if seed is None else seed
         self.N = setting.n_edges
         self.j_per_edge = j_per_edge or [setting.j_per_edge] * self.N
+        if len(self.j_per_edge) != self.N:
+            raise ValueError(
+                f"j_per_edge has {len(self.j_per_edge)} entries for "
+                f"n_edges={self.N}; a ragged device list must name every "
+                "edge exactly once")
         self.D = sum(self.j_per_edge)  # total devices
         # paper semantics: one local iteration = one epoch over the
         # device's own shard — so per-round steps scale inversely with the
@@ -111,8 +124,12 @@ class BHFLSimulator:
         imgs, labels = class_images(n_train + n_test, seed=self.seed,
                                     hw=setting.image_hw,
                                     n_classes=setting.n_classes)
-        self.test_x = jnp.asarray(imgs[n_train:])
-        self.test_y = jnp.asarray(labels[n_train:])
+        # kept as (read-only) numpy views: the device put happens once in
+        # build_inputs / the jitted eval — a sweep planner constructs one
+        # simulator per grid point, and P per-instance device copies of
+        # the test set would pin memory for nothing
+        self.test_x = imgs[n_train:]
+        self.test_y = labels[n_train:]
         parts = by_class(labels[:n_train], self.N, self.j_per_edge,
                          max_classes=setting.classes_per_device,
                          seed=self.seed)
@@ -177,7 +194,8 @@ class BHFLSimulator:
         t0 = time.time()
         inp = _engine.build_inputs(self)
         accs, losses, deltas = _engine.run_engine(
-            inp, aggregator=self.aggregator, normalize=self.normalize)
+            inp, aggregator=self.aggregator, normalize=self.normalize,
+            history_dtype=self.history_dtype)
         accs, losses, deltas = (np.asarray(accs), np.asarray(losses),
                                 np.asarray(deltas))
         if progress:
@@ -196,6 +214,9 @@ class BHFLSimulator:
         """The original per-edge Python loop (numerics reference)."""
         s = self.s
         t0 = time.time()
+        # device-resident test set for the per-round eval (self.test_x is
+        # a numpy view; re-committing it every round would tax the loop)
+        test_x, test_y = jnp.asarray(self.test_x), jnp.asarray(self.test_y)
         key = jax.random.key(self.seed)
         global_w = init_from_specs(self.specs, key)
         device_w = _bcast_like(global_w, self.D)        # stacked [D, ...]
@@ -259,7 +280,7 @@ class BHFLSimulator:
             self.chain.commit_block(f"edges@t={t}", f"global@t={t}")
 
             # ---- metrics
-            acc = float(cnn_accuracy(global_w, self.test_x, self.test_y))
+            acc = float(cnn_accuracy(global_w, test_x, test_y))
             accs.append(acc)
             losses.append(float(jnp.mean(dev_loss)))
             dn = float(sum(float(jnp.sum(jnp.square(a - b)))

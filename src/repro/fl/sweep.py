@@ -1,0 +1,339 @@
+"""Sweep fabric — shape-polymorphic sweep planner, sharded over the mesh.
+
+The paper's headline claims are *grids*: convergence vs. straggler fraction
+(Fig. 3), non-IID skew (Fig. 4), topology (N edges x J devices x K edge
+rounds), consensus latency.  PR 1's ``run_sweep`` could only vmap grids
+whose points agreed on every array shape; anything touching topology or
+round counts fell back to one compiled engine run per point.
+
+This module turns sweeps into a proper three-layer subsystem:
+
+  Planner   ``plan_sweep`` classifies override fields (batchable / paddable
+            / unsupported-with-a-clear-error), builds every grid point's
+            ``EngineInputs`` padded to the grid maxima (T/K/N/J/steps), and
+            stacks them along a leading point axis.  Padded extents are
+            numeric no-ops inside ``run_engine``: padded edges/devices
+            carry zero aggregation weight, padded rounds pass the scan
+            carry through, padded SGD steps apply no update.  Each point's
+            real extents ride along as ``t_valid``/``k_valid``/``n_valid``/
+            ``s_valid`` scalars.
+
+  Placement ``execute_plan`` shards the stacked point axis across the mesh
+            ``data`` axis with ``shard_map`` (``launch.sharding.SWEEP_RULES``
+            via ``sweep_spec``) and vmaps within each shard.  The same
+            autoscaling contract as the weight shardings applies: if the
+            point count does not divide a >1 mesh axis, the whole grid runs
+            as a single-device ``vmap`` instead of failing to lower.
+
+  Callers   ``run_sweep`` is the ``BHFLSimulator``-facing wrapper:
+            plan -> execute -> package a ``SweepResult``.  It is what
+            benchmarks/fig3_sweeps.py, fig4_heterogeneity.py, and the
+            examples drive; tests/test_sweep_fabric.py pins every padded,
+            sharded point to a standalone ``run_engine`` run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+from repro.configs.bhfl_cnn import BHFLSetting
+from repro.fl.engine import EngineInputs, build_inputs, run_engine
+from repro.launch.mesh import make_sweep_mesh
+from repro.launch.sharding import sweep_spec
+
+# ------------------------------------------------------- field classification
+#: Fields a grid may vary freely: they only change *data* (schedules, decay
+#: scalars, batch indices), never array shapes.
+BATCHED_FIELDS = frozenset({
+    "straggler_frac", "gamma0", "lam", "t_cold_boot", "classes_per_device",
+    "lr0", "lr_decay", "permanent_stop_round", "seed",
+})
+
+#: Fields that change array shapes but that the planner absorbs by padding
+#: every point to the grid maximum.
+PADDED_FIELDS = frozenset({
+    "n_edges", "j_per_edge", "k_edge_rounds", "t_global_rounds",
+})
+
+#: Shape-defining fields padding cannot absorb (they change the model or
+#: data geometry itself) — swept values get a clear error naming the field.
+UNSUPPORTED_FIELDS = frozenset({
+    "image_hw", "cnn_c1", "cnn_c2", "n_classes", "batch_size",
+})
+
+
+def _validate_overrides(overrides: list[dict]) -> None:
+    setting_fields = {f.name for f in dataclasses.fields(BHFLSetting)}
+    for ov in overrides:
+        for name in ov:
+            if name not in setting_fields:
+                raise ValueError(
+                    f"run_sweep: {name!r} is not a BHFLSetting field "
+                    f"(known fields: {sorted(setting_fields)})")
+            if name in UNSUPPORTED_FIELDS:
+                raise ValueError(
+                    f"run_sweep cannot sweep {name!r}: it changes the "
+                    "model/data geometry, which padding cannot absorb. "
+                    "Fix it across the grid (pass it via the base setting) "
+                    "or run separate sweeps per value. Sweepable shape "
+                    f"fields: {sorted(PADDED_FIELDS)}; data fields: "
+                    f"{sorted(BATCHED_FIELDS)}.")
+            # remaining fields are BATCHED or PADDED — both fine.
+
+
+# ------------------------------------------------------------------ planner
+#: ``EngineInputs`` fields that depend only on the seed and the
+#: (grid-constant) data/model geometry — byte-identical across same-seed
+#: points, so the planner keeps ONE copy and replicates it at placement
+#: time instead of stacking P copies on device (the training set dominates
+#: input bytes at real grid sizes).
+SHARED_DATA_FIELDS = frozenset({"train_x", "train_y", "test_x", "test_y",
+                                "init_w"})
+
+
+def _per_field(data_shared: bool, on_shared, on_stacked) -> EngineInputs:
+    """EngineInputs-shaped pytree prefix: one marker per field (used for
+    ``vmap`` in_axes and ``shard_map`` in_specs)."""
+    return EngineInputs(**{
+        f.name: (on_shared if data_shared and f.name in SHARED_DATA_FIELDS
+                 else on_stacked)
+        for f in dataclasses.fields(EngineInputs)})
+
+
+def _stack_points(inputs: list[EngineInputs],
+                  data_shared: bool) -> EngineInputs:
+    def one(name):
+        vals = [getattr(i, name) for i in inputs]
+        if data_shared and name in SHARED_DATA_FIELDS:
+            return vals[0]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *vals)
+
+    return EngineInputs(**{f.name: one(f.name)
+                           for f in dataclasses.fields(EngineInputs)})
+
+
+@dataclasses.dataclass
+class SweepPlan:
+    """A compiled-call-ready sweep: stacked padded inputs + metadata.
+
+    Holds only host scalars per point besides ``inputs`` — the planning
+    simulators (and their schedules/chains) are released once their
+    latency/block summaries are extracted, so plan lifetime does not pin
+    P sets of host state.
+    """
+    points: list                    # (overrides dict, seed) per grid point
+    inputs: EngineInputs            # stacked [P, ...], padded to grid maxima
+    grid_max: dict                  # {"t":..,"k":..,"n":..,"j":..,"steps":..}
+    aggregator: str
+    normalize: bool
+    history_dtype: Any
+    data_shared: bool               # train/test/init kept as ONE copy
+    sim_latency: np.ndarray         # [P] paper latency model totals
+    blocks: np.ndarray              # [P] committed blocks per point
+    t_valid: np.ndarray             # [P] real rounds per point
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """Batched trajectories for a grid of runs (leading axis = grid point).
+
+    Rows are padded to the grid's max round count: row ``p`` is valid up to
+    ``t_valid[p]`` rounds; past that, ``accuracy`` repeats the final valid
+    value and ``loss``/``grad_norm`` are 0.  ``trajectory(p)`` slices one
+    point's valid prefix.
+    """
+    points: list              # (overrides dict, seed) per grid point
+    accuracy: np.ndarray      # [P, T_max]
+    loss: np.ndarray          # [P, T_max]
+    grad_norm: np.ndarray     # [P, T_max]
+    sim_latency: np.ndarray   # [P]
+    blocks: np.ndarray        # [P]
+    t_valid: np.ndarray       # [P] real rounds per point
+
+    def trajectory(self, p: int) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        tv = int(self.t_valid[p])
+        return (self.accuracy[p, :tv], self.loss[p, :tv],
+                self.grad_norm[p, :tv])
+
+
+def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
+               overrides: Optional[list] = None,
+               aggregator: str = "hieavg",
+               device_stragglers: str = "temporary",
+               edge_stragglers: str = "temporary",
+               normalize: bool = False, history_dtype=None,
+               **sim_kw) -> SweepPlan:
+    """Precompute a grid (overrides x seeds) into one stacked ``EngineInputs``.
+
+    ``overrides`` entries may change topology and round counts
+    (``PADDED_FIELDS``) — every point is padded to the grid maxima so the
+    stack is rectangular.  ``j_per_edge`` additionally accepts a per-edge
+    list (Fig. 4b inconsistent-J deployments).  Geometry fields
+    (``UNSUPPORTED_FIELDS``) raise immediately with the field named.
+    """
+    from repro.fl.simulator import BHFLSimulator  # lazy: avoid import cycle
+
+    overrides = [dict(ov) for ov in (overrides or [{}])]
+    _validate_overrides(overrides)
+    # an override's explicit "seed" wins over the ``seeds`` cross product
+    # and is NOT crossed with it (the simulator's seed argument governs
+    # data/schedules/chain, so crossing would emit duplicate points)
+    points = []
+    for ov in overrides:
+        if "seed" in ov:
+            points.append((ov, int(ov["seed"])))
+        else:
+            points.extend((ov, seed) for seed in seeds)
+
+    sims = []
+    for ov, seed in points:
+        ov = dict(ov)
+        ov.pop("seed", None)
+        kw = dict(sim_kw)
+        jpe = ov.pop("j_per_edge", None)
+        if isinstance(jpe, (list, tuple, np.ndarray)):
+            kw["j_per_edge"] = [int(j) for j in jpe]
+        elif jpe is not None:
+            ov["j_per_edge"] = int(jpe)
+        sims.append(BHFLSimulator(
+            dataclasses.replace(setting, **ov), aggregator,
+            device_stragglers, edge_stragglers, normalize=normalize,
+            seed=seed, **kw))
+
+    grid_max = {
+        "t": max(s.s.t_global_rounds for s in sims),
+        "k": max(s.s.k_edge_rounds for s in sims),
+        "n": max(s.N for s in sims),
+        "j": max(max(s.j_per_edge) for s in sims),
+        "steps": max(s.steps for s in sims),
+    }
+    # dataset/init dedup: those arrays are a pure function of (seed,
+    # geometry), and geometry is grid-constant — points with the same
+    # seed reuse the first such point's device buffers, so H2D puts scale
+    # with the number of distinct seeds, not grid points.  With exactly
+    # one seed the stack itself is also elided (``data_shared``: one
+    # unstacked copy, replicated at placement time).
+    data_shared = len({s.seed for s in sims}) == 1
+    first_by_seed: dict = {}
+    inputs: list[EngineInputs] = []
+    for s in sims:
+        inp = build_inputs(
+            s, t_max=grid_max["t"], k_max=grid_max["k"],
+            n_max=grid_max["n"], j_max=grid_max["j"],
+            steps_max=grid_max["steps"],
+            share_data_from=first_by_seed.get(s.seed))
+        first_by_seed.setdefault(s.seed, inp)
+        inputs.append(inp)
+    shapes = [jax.tree.map(jnp.shape, i) for i in inputs]
+    if any(s != shapes[0] for s in shapes[1:]):
+        raise ValueError(
+            "sweep grid points disagree on array shapes even after padding "
+            "— the base setting/sim kwargs (image size, batch size, data "
+            "sizes) must be identical across the grid")
+    stacked = _stack_points(inputs, data_shared)
+    return SweepPlan(points=points, inputs=stacked, grid_max=grid_max,
+                     aggregator=aggregator, normalize=normalize,
+                     history_dtype=history_dtype, data_shared=data_shared,
+                     sim_latency=np.asarray([s.paper_latency()
+                                             for s in sims]),
+                     blocks=np.asarray([len(s.chain.blocks) - 1
+                                        for s in sims]),
+                     t_valid=np.asarray([s.s.t_global_rounds
+                                         for s in sims]))
+
+
+# ---------------------------------------------------------------- placement
+@functools.lru_cache(maxsize=None)
+def _vmap_runner(aggregator: str, normalize: bool, history_dtype,
+                 data_shared: bool):
+    def runner(inp):
+        return run_engine(inp, aggregator=aggregator, normalize=normalize,
+                          history_dtype=history_dtype)
+
+    return jax.vmap(runner, in_axes=(_per_field(data_shared, None, 0),))
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_runner(aggregator: str, normalize: bool, history_dtype,
+                    mesh, spec, data_shared: bool):
+    """jit(shard_map(vmap(run_engine))) — cached so repeated sweeps with
+    the same static config reuse the compiled executable instead of paying
+    a fresh trace + compile per call (jit caches by callable identity)."""
+    from jax.experimental.shard_map import shard_map
+
+    inner = _vmap_runner(aggregator, normalize, history_dtype, data_shared)
+    sharded = shard_map(
+        inner, mesh=mesh,
+        in_specs=(_per_field(data_shared, PartitionSpec(), spec),),
+        out_specs=spec)
+    return jax.jit(sharded)
+
+
+def execute_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto"
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Run a plan's stacked grid as ONE compiled call.
+
+    ``placement``: ``"auto"`` shards the point axis over the mesh ``data``
+    axis when ``sweep_spec`` says it divides (falling back to single-device
+    ``vmap`` otherwise — the same autoscaling contract as the weight
+    shardings); ``"vmap"`` forces the single-device path; ``"shard"``
+    requires the sharded path and raises if the mesh cannot take it.
+    """
+    if placement not in ("auto", "vmap", "shard"):
+        raise ValueError(f"unknown placement {placement!r}")
+    n_points = len(plan.points)
+
+    spec = PartitionSpec()
+    if placement != "vmap":
+        mesh = mesh if mesh is not None else make_sweep_mesh()
+        spec = sweep_spec(n_points, mesh)
+    if spec == PartitionSpec():
+        if placement == "shard":
+            raise ValueError(
+                f"placement='shard' but {n_points} grid points do not "
+                f"divide a >1 mesh axis "
+                f"(mesh={dict(mesh.shape) if mesh is not None else None})")
+        return _vmap_runner(plan.aggregator, plan.normalize,
+                            plan.history_dtype,
+                            plan.data_shared)(plan.inputs)
+    return _sharded_runner(plan.aggregator, plan.normalize,
+                           plan.history_dtype, mesh, spec,
+                           plan.data_shared)(plan.inputs)
+
+
+# ------------------------------------------------------------------ wrapper
+def run_sweep(setting: BHFLSetting, seeds=(0,), *,
+              overrides: Optional[list] = None,
+              aggregator: str = "hieavg",
+              device_stragglers: str = "temporary",
+              edge_stragglers: str = "temporary",
+              normalize: bool = False, history_dtype=None,
+              mesh=None, placement: str = "auto",
+              **sim_kw) -> SweepResult:
+    """Grids (including topology/round grids) as ONE compiled sharded call.
+
+    ``overrides`` is a list of ``BHFLSetting`` field-override dicts crossed
+    with ``seeds``.  Straggler fractions/kinds, gamma/lambda, cold-boot
+    length, lr schedule, and seeds vary as pure data; ``n_edges``,
+    ``j_per_edge`` (int or per-edge list), ``k_edge_rounds``, and
+    ``t_global_rounds`` vary via padding to the grid max; model/data
+    geometry fields raise a ``ValueError`` naming the field.
+    """
+    plan = plan_sweep(setting, seeds, overrides=overrides,
+                      aggregator=aggregator,
+                      device_stragglers=device_stragglers,
+                      edge_stragglers=edge_stragglers, normalize=normalize,
+                      history_dtype=history_dtype, **sim_kw)
+    accs, losses, deltas = execute_plan(plan, mesh=mesh, placement=placement)
+    return SweepResult(
+        points=plan.points,
+        accuracy=np.asarray(accs), loss=np.asarray(losses),
+        grad_norm=np.asarray(deltas),
+        sim_latency=plan.sim_latency, blocks=plan.blocks,
+        t_valid=plan.t_valid)

@@ -33,5 +33,16 @@ def make_debug_mesh(data: int = 1, model: int = 1, pod: int = 1
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_sweep_mesh(n_devices: int | None = None) -> jax.sharding.Mesh:
+    """1-D ``data`` mesh over all (or ``n_devices``) local devices.
+
+    The sweep fabric shards the stacked grid-point axis over ``data``
+    (``launch.sharding.SWEEP_RULES``); on one device this is a size-1 mesh
+    and the placement layer degrades to plain ``vmap``.
+    """
+    n = n_devices if n_devices is not None else len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
 def mesh_axis_size(mesh: jax.sharding.Mesh, name: str) -> int:
     return mesh.shape[name] if name in mesh.shape else 1

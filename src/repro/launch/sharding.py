@@ -67,6 +67,15 @@ SERVE_RULES = {
     **{**_TP, "embed": (("data",),)},
 }
 
+# sweep fabric: the stacked grid-point axis of a batched BHFL sweep
+# (repro.fl.sweep).  Prefers the full pod×data product when pods exist,
+# otherwise the data axis; the usual divisibility contract applies, so an
+# indivisible or single-device grid degrades to the vmap path instead of
+# failing to lower.
+SWEEP_RULES = {
+    "sweep_points": (("pod", "data"), ("data",)),
+}
+
 # logical axes resolved in a second pass, after the primary dims have had
 # first pick of the mesh axes (e.g. kv_seq takes "model" only when the
 # arch's kv_heads count is not divisible by the model-axis extent)
@@ -75,6 +84,17 @@ SECONDARY_AXES = frozenset({"kv_seq"})
 
 def train_rules(clients_per_pod: int) -> dict:
     return TRAIN_RULES_FL1 if clients_per_pod == 1 else TRAIN_RULES
+
+
+def sweep_spec(n_points: int, mesh: Mesh) -> P:
+    """PartitionSpec for a sweep's stacked point axis on ``mesh``.
+
+    ``P()`` (replicated) means the autoscaling contract chose the
+    single-device path: the point count does not divide any candidate mesh
+    axis, or the mesh has no >1 sweep-capable axis — callers fall back to
+    ``vmap`` exactly as ``resolve_spec`` degrades undersized kv heads.
+    """
+    return resolve_spec((n_points,), ("sweep_points",), SWEEP_RULES, mesh)
 
 
 # ------------------------------------------------------------- resolution

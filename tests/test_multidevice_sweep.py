@@ -1,0 +1,68 @@
+"""Tier-1 multi-device coverage for the sweep fabric's shard_map path.
+
+jax fixes its device count at first import, so the 4-device run happens in
+a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+(the standard forced-host-device trick).  Inside, the same padded
+shape-changing grid is executed via the single-device ``vmap`` path and
+the ``shard_map``-over-``data`` path, and the two must agree; one point is
+additionally pinned to a standalone engine run so the sharded numbers are
+anchored to the reference, not just to each other.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+_CHILD = textwrap.dedent("""
+    import dataclasses
+    import jax
+    import numpy as np
+
+    from repro.configs.bhfl_cnn import REDUCED
+    from repro.fl import BHFLSimulator, run_sweep
+    from repro.launch import make_sweep_mesh
+    from repro.launch.sharding import sweep_spec
+    from jax.sharding import PartitionSpec
+
+    assert len(jax.devices()) == 4, jax.devices()
+    mesh = make_sweep_mesh()
+    assert sweep_spec(4, mesh) == PartitionSpec("data")
+    assert sweep_spec(3, mesh) == PartitionSpec()   # indivisible -> vmap
+
+    TINY = dataclasses.replace(REDUCED, t_global_rounds=3, n_edges=3,
+                               j_per_edge=3, image_hw=8)
+    KW = dict(n_train=300, n_test=100, steps_per_epoch=2)
+    ovs = [{"n_edges": 2}, {"j_per_edge": 2}, {"k_edge_rounds": 1},
+           {"straggler_frac": 0.4}]
+
+    a = run_sweep(TINY, overrides=ovs, placement="vmap", **KW)
+    b = run_sweep(TINY, overrides=ovs, placement="shard", **KW)
+    np.testing.assert_allclose(b.accuracy, a.accuracy, atol=1e-6)
+    np.testing.assert_allclose(b.loss, a.loss, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b.grad_norm, a.grad_norm, rtol=1e-4,
+                               atol=1e-6)
+
+    s0 = dataclasses.replace(TINY, **ovs[0])
+    r0 = BHFLSimulator(s0, "hieavg", "temporary", "temporary", **KW).run()
+    np.testing.assert_allclose(b.accuracy[0], r0.accuracy, atol=1e-6)
+    np.testing.assert_allclose(b.loss[0], r0.loss, rtol=1e-5, atol=1e-6)
+
+    auto = run_sweep(TINY, overrides=ovs, placement="auto", **KW)
+    np.testing.assert_allclose(auto.accuracy, b.accuracy, atol=1e-6)
+    print("MULTIDEVICE_SWEEP_OK")
+""")
+
+
+def test_shard_map_agrees_with_vmap_on_four_host_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _CHILD],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "MULTIDEVICE_SWEEP_OK" in proc.stdout
