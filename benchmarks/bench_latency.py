@@ -1,0 +1,82 @@
+"""Latency-fabric throughput — writes ``BENCH_latency.json``.
+
+Measures points/sec for the fig7 grid (both panels: lp_device scaling +
+consensus-multiplier × K — all shape- or data-changing latency knobs)
+driven two ways:
+
+  * ``legacy_loop`` — one ``BHFLSimulator.run_legacy`` per point: the
+    pre-fabric way to measure a latency×K tradeoff empirically (a Python
+    loop of standalone runs, no clock accounting),
+  * ``fabric_sweep`` — the whole grid as ONE compiled padded sweep
+    through ``plan_sweep``/``execute_plan`` (``run_sweep``), simulated
+    clock trajectories included.
+
+Timings are best-of-``REPS`` after a warm-up run (the shared ``best_of``
+helper), like bench_engine/bench_sweep.  The budget is intentionally
+small (T=10, 1 local step) so the numbers track orchestration overhead,
+not training FLOPs.
+
+  PYTHONPATH=src python -m benchmarks.run --only latency --emit-json
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.configs.bhfl_cnn import REDUCED
+
+from .common import Csv, best_of
+from .fig7_latency import sweep_overrides
+
+T_ROUNDS = 10
+KW = dict(n_train=1500, n_test=300, steps_per_epoch=1, normalize=True)
+REPS = 2
+
+
+def _setting():
+    return dataclasses.replace(REDUCED, t_global_rounds=T_ROUNDS)
+
+
+def main(emit_json: bool = True) -> dict:
+    from repro.fl import BHFLSimulator, run_sweep
+
+    csv = Csv("bench_latency")
+    csv.row("path", "seconds", "points_per_sec")
+    overrides, _ = sweep_overrides()
+    n_pts = len(overrides)
+
+    def legacy_loop():
+        for ov in overrides:
+            BHFLSimulator(dataclasses.replace(_setting(), **ov),
+                          "hieavg", "temporary", "temporary",
+                          **KW).run_legacy()
+
+    t_legacy = best_of(legacy_loop, REPS)
+    csv.row("legacy_loop", f"{t_legacy:.2f}", f"{n_pts / t_legacy:.2f}")
+
+    t_sweep = best_of(lambda: run_sweep(_setting(), overrides=overrides,
+                                        **KW), REPS)
+    csv.row("fabric_sweep", f"{t_sweep:.2f}", f"{n_pts / t_sweep:.2f}")
+
+    out = {
+        "setting": "REDUCED",
+        "grid": "fig7 (both panels)",
+        "points": n_pts,
+        "t_global_rounds": T_ROUNDS,
+        "steps_per_epoch": KW["steps_per_epoch"],
+        "reps": REPS,
+        "legacy_points_per_sec": round(n_pts / t_legacy, 3),
+        "sweep_points_per_sec": round(n_pts / t_sweep, 3),
+        "sweep_speedup_vs_legacy": round(t_legacy / t_sweep, 2),
+    }
+    if emit_json:
+        with open("BENCH_latency.json", "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote BENCH_latency.json (one-call sweep "
+              f"{out['sweep_speedup_vs_legacy']}x vs legacy loop)")
+    csv.done()
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -11,9 +11,9 @@ import argparse
 import functools
 import time
 
-from . import (ablations, bench_engine, bench_sweep, fig2_convergence,
-               fig3_sweeps, fig4_heterogeneity, fig56_single_layer,
-               fig7_latency, kernel_bench, roofline)
+from . import (ablations, bench_engine, bench_latency, bench_sweep,
+               fig2_convergence, fig3_sweeps, fig4_heterogeneity,
+               fig56_single_layer, fig7_latency, kernel_bench, roofline)
 
 SUITES = {
     "fig2": fig2_convergence.main,
@@ -26,6 +26,7 @@ SUITES = {
     "roofline": lambda: roofline.main([]),
     "engine": bench_engine.main,
     "sweep": bench_sweep.main,
+    "latency": bench_latency.main,
 }
 
 
@@ -42,6 +43,8 @@ def main() -> None:
                                          emit_json=args.emit_json)
     suites["sweep"] = functools.partial(bench_sweep.main,
                                         emit_json=args.emit_json)
+    suites["latency"] = functools.partial(bench_latency.main,
+                                          emit_json=args.emit_json)
     t0 = time.time()
     for name in names:
         suites[name]()

@@ -1,24 +1,44 @@
 """Latency optimization walkthrough (paper Sec. 5 / Fig. 7).
 
-Sweeps blockchain consensus latency and shows how the optimal number of
-edge-aggregation rounds K* responds (constraint C2: consensus must hide
-inside the K-round edge window), then prints the full feasibility table
-for one setting.
+Shows the two K* selectors of the latency fabric side by side:
+
+  * theoretical — ``optimize_k`` enumerates the dense K axis under the
+    Theorem-2 convergence bound (C1) and the consensus-window constraint
+    (C2), with the consensus latency from the closed-form Raft model
+    (``expected_consensus_latency``, pinned against the discrete-event
+    ``RaftChain``);
+  * empirical — one padded sweep over the K grid runs real training on
+    the batched engine, and ``SweepResult.k_star_empirical`` picks the K
+    whose *measured* convergence reaches a target accuracy in the least
+    simulated time.
+
+then prints the full feasibility table for one setting using the
+vectorized dense-K model (``total_latency_k``/``edge_window_k``/
+``omega_bound_k`` + ``optimize_k_masked``).
 
   PYTHONPATH=src python examples/latency_optimization.py
 """
+import dataclasses
+
 import numpy as np
 
-from repro.core import (BoundParams, LatencyParams, RaftChain, RaftParams,
-                        edge_window, omega_bound, optimize_k, total_latency)
+from repro.configs.bhfl_cnn import REDUCED
+from repro.core import (BoundParams, LatencyParams, RaftParams,
+                        edge_window_k, expected_consensus_latency,
+                        omega_bound, omega_bound_k, optimize_k,
+                        optimize_k_masked, total_latency_k)
+from repro.fl import run_sweep
 
 bp = BoundParams()
 lp = LatencyParams()          # paper's measured Raspberry Pi / EC2 numbers
 
-print("consensus_latency -> K*  (total latency)")
+# 1) theoretical K* vs consensus latency (constraint C2) -----------------
+# full per-round consensus (election + commit) — the same L_bc the engine
+# clock charges; pass include_election=False for the paper's
+# election-amortized steady state instead
+print("consensus_latency -> K*  (total latency)  [closed-form Raft model]")
 for link in (0.05, 0.2, 0.5, 1.0, 2.0):
-    chain = RaftChain(lp.N, RaftParams(link_latency=link))
-    lbc = chain.consensus_latency()
+    lbc = expected_consensus_latency(RaftParams(link_latency=link), lp.N)
     res = optimize_k(lp, lambda k: omega_bound(k, bp), omega_bar=25.0,
                      consensus_latency=lbc)
     if res:
@@ -27,12 +47,36 @@ for link in (0.05, 0.2, 0.5, 1.0, 2.0):
     else:
         print(f"  L_bc={lbc:5.2f}s -> infeasible")
 
-print("\nfeasibility table (L_bc = 0.45s):")
+# 2) theoretical vs empirical K*: one padded sweep over the K grid -------
+K_GRID = (1, 2, 4)
+setting = dataclasses.replace(REDUCED, t_global_rounds=10)
+sw = run_sweep(setting, overrides=[{"k_edge_rounds": k} for k in K_GRID],
+               n_train=1500, n_test=300, steps_per_epoch=2, normalize=True)
+target = 0.6 * float(sw.accuracy.max())
+best, times = sw.k_star_empirical(target)
+# full election + commit: the engine's clock charges the whole per-round
+# consensus draw, so the theoretical solve must see the same L_bc
+lbc = expected_consensus_latency(RaftParams(link_latency=setting.link_latency),
+                                 setting.n_edges)
+res = optimize_k(LatencyParams(T=10), lambda k: omega_bound(k, bp),
+                 omega_bar=25.0, consensus_latency=lbc)
+print(f"\ntheoretical vs empirical K* (target acc {target:.2f}):")
+print("  K   time_to_target(s)   final_acc")
+for p, k in enumerate(K_GRID):
+    t = f"{times[p]:.1f}" if np.isfinite(times[p]) else "never"
+    clock, acc = sw.latency_trajectory(p)
+    print(f"  {k}   {t:>12}         {acc[-1]:.3f}")
+print(f"  -> theoretical K* = {res.k_star} (bound-driven), "
+      f"empirical K* = {K_GRID[best]} (measured convergence + clock)")
+
+# 3) feasibility table on the vectorized dense-K model -------------------
+print("\nfeasibility table (L_bc = 0.45s), dense-K masked argmin:")
+lat = total_latency_k(lp, 10)
+win = edge_window_k(lp, 10)
+om = omega_bound_k(bp, 10)
+k_star, k_lat, feas = optimize_k_masked(lat, om, win, 25.0, 0.45)
 print("  K   L(K)       edge_window  omega(K)   feasible")
-res = optimize_k(lp, lambda k: omega_bound(k, bp), omega_bar=25.0,
-                 consensus_latency=0.45, k_max=10)
-for k in range(1, 11):
-    om = omega_bound(k, bp)
-    print(f"  {k:2d}  {total_latency(k, lp):9.1f}  {edge_window(k, lp):6.2f}s"
-          f"      {om:8.3f}   {bool(res.feasible[k - 1])}")
-print(f"\nK* = {res.k_star}")
+for i in range(10):
+    print(f"  {i + 1:2d}  {float(lat[i]):9.1f}  {float(win[i]):6.2f}s"
+          f"      {float(om[i]):8.3f}   {bool(feas[i])}")
+print(f"\nK* = {int(k_star)}")

@@ -1,0 +1,53 @@
+"""Accuracy-vs-latency Pareto front: consensus delay × K, one padded sweep.
+
+The paper's central tension (Sec. 5): more edge rounds K converge faster
+per global round but stretch the wall clock, while the blockchain's
+consensus latency hides inside the K-round edge window only when the
+window is long enough (constraint C2).  The latency fabric lets us *map*
+that tradeoff empirically — a consensus-multiplier × K grid runs as ONE
+compiled sweep, every point carries a simulated-clock trajectory, and the
+accuracy-per-second Pareto front falls out.
+
+  PYTHONPATH=src python examples/latency_pareto.py
+"""
+import dataclasses
+import itertools
+
+import numpy as np
+
+from repro.configs.bhfl_cnn import REDUCED
+from repro.fl import run_sweep
+
+CONS_MULTS = (1.0, 10.0, 40.0)
+K_GRID = (1, 2, 4)
+
+setting = dataclasses.replace(REDUCED, t_global_rounds=10)
+overrides = [{"consensus_mult": m, "k_edge_rounds": k}
+             for m, k in itertools.product(CONS_MULTS, K_GRID)]
+sw = run_sweep(setting, overrides=overrides,
+               n_train=1500, n_test=300, steps_per_epoch=2, normalize=True)
+
+# every point: (simulated seconds to finish, best accuracy reached)
+cands = []
+for p, (ov, _seed) in enumerate(sw.points):
+    clock, acc = sw.latency_trajectory(p)
+    cands.append((float(clock[-1]), float(acc.max()), ov))
+
+print("consensus_mult  K   sim_seconds  best_acc  acc_per_minute")
+for secs, acc, ov in cands:
+    print(f"{ov['consensus_mult']:14.0f}  {ov['k_edge_rounds']}  "
+          f"{secs:11.1f}  {acc:8.3f}  {60.0 * acc / secs:14.3f}")
+
+# Pareto front: no other point is both faster and more accurate
+front = [(s, a, ov) for s, a, ov in cands
+         if not any(s2 < s and a2 >= a or (s2 <= s and a2 > a)
+                    for s2, a2, _ in cands)]
+front.sort(key=lambda c: (c[0], c[1]))
+print("\nPareto front (faster -> more accurate):")
+for secs, acc, ov in front:
+    print(f"  mult={ov['consensus_mult']:.0f} K={ov['k_edge_rounds']}: "
+          f"{acc:.3f} acc in {secs:.1f}s")
+best = max(cands, key=lambda c: c[1] / c[0])
+print(f"\nbest accuracy-per-second: mult={best[2]['consensus_mult']:.0f} "
+      f"K={best[2]['k_edge_rounds']} "
+      f"({len(sw.points)}-point grid, one compiled call)")

@@ -22,6 +22,7 @@ sim = BHFLSimulator(setting, aggregator="hieavg",
                     normalize=True)
 result = sim.run(progress=True)
 print(f"\nfinal accuracy {result.accuracy[-1]:.3f} "
+      f"in {result.sim_clock[-1]:.0f} simulated seconds "
       f"({result.blocks} blocks committed, "
       f"chain_valid={result.chain_valid})")
 

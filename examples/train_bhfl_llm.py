@@ -5,6 +5,13 @@ consensus, checkpointing) on a reduced h2o-danube variant — a few hundred
 steps of a ~1M-param model on CPU; the identical driver runs the 16x16
 production mesh on TPU (drop --smoke).
 
+The driver takes the engine path (``fused=True``, the default): the whole
+T×K-round run is ONE ``lax.scan``-compiled program — batches, straggler
+masks, and the lr schedule precomputed host-side, the Raft chain replayed
+up front with its election+commit latency feeding a simulated clock — the
+same orchestration as the CNN engine, so no example drives the legacy
+per-round Python loop anymore.
+
   PYTHONPATH=src python examples/train_bhfl_llm.py
 """
 import tempfile
@@ -16,6 +23,7 @@ with tempfile.TemporaryDirectory() as ckpt:
                     n_clients=4, batch=4, seq=64, straggler_frac=0.25,
                     normalize=True, ckpt_dir=ckpt)
     print(f"\nloss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} "
-          f"over {len(out['losses'])} global rounds")
+          f"over {len(out['losses'])} global rounds "
+          f"({out['sim_clock'][-1]:.0f} simulated seconds)")
     print(f"blockchain: {out['blocks']} blocks, valid={out['chain_valid']}")
     assert out["losses"][-1] < out["losses"][0], "training must make progress"

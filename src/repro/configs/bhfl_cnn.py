@@ -28,6 +28,15 @@ class BHFLSetting:
     classes_per_device: int = 1     # non_IID_1
     permanent_stop_round: int = 40
     seed: int = 0
+    # --- latency fabric (Sec. 5 / Sec. 6.2.2 measured constants).  These
+    # are data-batched sweep fields: the engine precomputes per-round time
+    # draws from them, so a consensus-latency x topology grid is one
+    # compiled call (see repro.fl.sweep.BATCHED_FIELDS).
+    lm_device: float = 0.51         # E[LM]  device<->edge one-way (s)
+    lp_device: float = 1.67         # E[LP]  local training per edge round
+    lm_edge: float = 0.05           # E[LM'] edge<->leader one-way
+    link_latency: float = 0.05      # Raft edge<->edge message (s)
+    consensus_mult: float = 1.0     # scales the drawn per-round L_bc
 
 
 DEFAULT = BHFLSetting()

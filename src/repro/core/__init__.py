@@ -4,11 +4,14 @@ from .hieavg import (History, init_history, update_history, edge_aggregate,
                      global_aggregate_cold)
 from .baselines import fedavg, t_fedavg, d_fedavg
 from .straggler import no_stragglers, permanent, temporary, from_fraction
-from .blockchain import Block, RaftChain, RaftParams
+from .blockchain import (Block, RaftChain, RaftParams,
+                         expected_consensus_latency,
+                         expected_election_latency)
 from .latency import (LatencyParams, shannon_rate, comm_latency,
                       compute_latency, total_latency, edge_window, optimize_k,
-                      KOptResult)
-from .convergence import BoundParams, omega_bound
+                      KOptResult, k_axis, total_latency_k, edge_window_k,
+                      optimize_k_masked, round_time, device_deadline)
+from .convergence import BoundParams, omega_bound, omega_bound_k
 
 __all__ = [
     "History", "init_history", "update_history", "edge_aggregate",
@@ -16,7 +19,10 @@ __all__ = [
     "fedavg", "t_fedavg", "d_fedavg",
     "no_stragglers", "permanent", "temporary", "from_fraction",
     "Block", "RaftChain", "RaftParams",
+    "expected_consensus_latency", "expected_election_latency",
     "LatencyParams", "shannon_rate", "comm_latency", "compute_latency",
     "total_latency", "edge_window", "optimize_k", "KOptResult",
-    "BoundParams", "omega_bound",
+    "k_axis", "total_latency_k", "edge_window_k", "optimize_k_masked",
+    "round_time", "device_deadline",
+    "BoundParams", "omega_bound", "omega_bound_k",
 ]

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import math
 from typing import Any, Optional
 
 import numpy as np
@@ -84,6 +85,9 @@ class RaftChain:
         The node whose timeout fires first requests votes; it wins if a
         majority of nodes is alive (consortium setting: no byzantine voters).
         Re-draws on split timeouts within 1ms, like Raft's re-election.
+        Raises ``RuntimeError`` when fewer than a majority of the N nodes
+        are alive — the win condition can never hold, and silently looping
+        forever (the pre-fix behaviour) hid the quorum loss from callers.
         """
         elapsed = 0.0
         while True:
@@ -92,6 +96,10 @@ class RaftChain:
             alive_ids = np.flatnonzero(self.alive)
             if alive_ids.size == 0:
                 raise RuntimeError("no live edge servers")
+            if alive_ids.size < self.n // 2 + 1:
+                raise RuntimeError(
+                    f"no majority alive ({alive_ids.size}/{self.n} nodes): "
+                    "a leader can never win the vote")
             timeouts = self.rng.uniform(lo, hi, size=alive_ids.size)
             order = np.argsort(timeouts)
             first, t_first = alive_ids[order[0]], timeouts[order[0]]
@@ -153,3 +161,61 @@ class RaftChain:
             if blk.prev_hash != prev.hash or blk.index != prev.index + 1:
                 return False
         return True
+
+
+# --------------------------------------------------- statistical model
+# Closed-form expectations of the discrete-event simulation above, used by
+# the latency fabric (repro.core.latency / repro.fl.sweep) so consensus
+# latency can be swept without replaying a RaftChain per grid point.  The
+# discrete-event ``RaftChain`` stays the reference implementation;
+# tests/test_latency_fabric.py pins these expectations against Monte-Carlo
+# replay over a link_latency x N grid.
+
+_SPLIT_EPS = 1e-3   # elect_leader's split-vote window (two timeouts < 1ms)
+
+
+def expected_election_latency(params: RaftParams, n_nodes: int,
+                              n_alive: Optional[int] = None) -> float:
+    """E[elapsed] of ``RaftChain.elect_leader`` with ``n_alive`` live nodes.
+
+    One attempt costs ``t_first + 2 * link_latency`` where ``t_first`` is
+    the minimum of A iid U(lo, hi) timeouts: ``E[t_first] = lo + w/(A+1)``.
+    An attempt fails on a split vote — the gap between the two smallest of
+    A uniforms on a width-``w`` window falls under eps with probability
+    ``1 - (1 - eps/w)^A`` (each consecutive uniform spacing is
+    Beta(1, A)-scaled: for A=2, P(|X1-X2| > d) = (1 - d/w)^2) — so the
+    attempt count is geometric and the expectation divides by the
+    per-attempt success probability.  The tiny
+    negative correlation between ``t_first`` and the first spacing is
+    ignored (eps/w ~ 0.7%); the Monte-Carlo pin budgets for it.
+
+    Returns ``inf`` when fewer than a majority of ``n_nodes`` is alive
+    (``elect_leader`` raises in that regime — no finite expectation
+    exists).
+    """
+    a = n_nodes if n_alive is None else n_alive
+    if a < n_nodes // 2 + 1:
+        return float("inf")
+    lo, hi = params.election_timeout
+    w = hi - lo
+    e_first = lo + w / (a + 1.0)
+    p_split = 1.0 - (1.0 - _SPLIT_EPS / w) ** a if a > 1 else 0.0
+    return (e_first + 2.0 * params.link_latency) / (1.0 - p_split)
+
+
+def expected_consensus_latency(params: RaftParams, n_nodes: int,
+                               n_alive: Optional[int] = None,
+                               include_election: bool = True) -> float:
+    """Expected per-global-round consensus latency L_bc.
+
+    Replication (serialize + AppendEntries round trip) is always on the
+    round's critical path; the election runs once per round in the BHFL
+    workflow and is included by default.  ``include_election=False`` gives
+    the steady-state replication-only figure, identical to
+    ``RaftChain.consensus_latency()`` (the paper amortizes the election
+    into the edge window).
+    """
+    lbc = params.block_serialize + 2.0 * params.link_latency
+    if include_election:
+        lbc += expected_election_latency(params, n_nodes, n_alive)
+    return lbc

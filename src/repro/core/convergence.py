@@ -82,3 +82,25 @@ def omega_bound(K: int, p: BoundParams) -> float:
         - p.delta_bar_p
     term2 = (2.0 + p.L) * straggler_pen / denom
     return term1 + term2
+
+
+def omega_bound_k(p: BoundParams, k_max: int):
+    """Omega over the dense ``[k_max]`` axis K = 1..k_max — traced ``jnp``.
+
+    The latency fabric's companion to ``repro.core.latency.total_latency_k``
+    / ``edge_window_k``: feeds ``optimize_k_masked`` so a whole grid of K*
+    solves batches into one call.  +inf outside the step-size-valid region
+    (denominator <= 0), like the scalar reference; fields of ``p`` may be
+    traced scalars.
+    """
+    import jax.numpy as jnp
+
+    sqrt_k = jnp.sqrt(jnp.arange(1, k_max + 1, dtype=jnp.float32))
+    rho = p.j_ratio
+    denom = 2.0 * sqrt_k * p.eta * rho + p.L * p.eta - 1.0
+    term1 = 2.0 * (p.f_gap + sqrt_k * p.eta * rho * p.delta_pp_sq) \
+        / (jnp.sqrt(jnp.float32(p.T)) * denom)
+    straggler_pen = rho + p.gamma0 * p.s_frac * (p.Delta_i + p.delta_i_sq) \
+        - p.delta_bar_p
+    term2 = (2.0 + p.L) * straggler_pen / denom
+    return jnp.where(denom > 0, term1 + term2, jnp.inf)

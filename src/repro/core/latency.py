@@ -1,4 +1,4 @@
-"""Latency model and K* optimization (Sec. 5).
+"""Latency model and K* optimization (Sec. 5) — the latency fabric core.
 
 Communication uses Shannon capacity r = B log2(1 + u*pi/eps^2); transmission
 latency is D/r.  Compute latency is C/f (CPU cycles / clock).  Total latency
@@ -13,8 +13,23 @@ subject to
     C3: K in N+.
 
 This is an integer program over a single scalar; we solve it exactly by
-enumeration (the paper suggests CVXPY — unavailable offline, and enumeration
-over K <= K_max is already polynomial and exact).
+enumeration over a dense ``[K_max]`` axis.  Two implementations share the
+same masked-argmin semantics:
+
+  * ``optimize_k`` — the host-side float64 reference (returns
+    ``KOptResult``/``None``), used by the analytic callers and as the
+    parity anchor;
+  * ``total_latency_k``/``edge_window_k`` + ``optimize_k_masked`` — the
+    traced ``jnp`` path: everything is an array over the dense K axis, the
+    argmin is masked by the feasibility constraints, and the whole thing
+    is jit/vmap-friendly so the sweep fabric can batch K* solves over
+    parameter grids (one call per grid, not per point).
+
+``LatencyParams`` additionally carries the dispersion knobs of the
+engine's per-round accounting (``repro.fl.engine`` draws per-device
+compute/comm times from it; see ``build_inputs``): jitter widths, the
+straggler slowdown, and the deadline multiplier of the deadline-based
+aggregation the paper assumes.
 """
 from __future__ import annotations
 
@@ -22,6 +37,7 @@ import dataclasses
 import math
 from typing import Callable, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -45,17 +61,41 @@ def compute_latency(cpu_cycles: float, clock_hz: float) -> float:
 class LatencyParams:
     """Expectation-level parameters of Sec. 5.1 (defaults = the paper's
     measured numbers: 1.67 s local training, 0.51 s device<->edge transfer,
-    0.05 s edge<->edge link, Sec. 6.2.2)."""
+    0.05 s edge<->edge link, Sec. 6.2.2) plus the dispersion knobs the
+    engine's per-round accounting draws from."""
     T: int = 50            # global rounds
     N: int = 5             # edge servers
     J: int = 5             # devices per edge
     lm_device: float = 0.51   # E[LM]   device<->edge one-way
     lp_device: float = 1.67   # E[LP]   local training per edge round
     lm_edge: float = 0.05     # E[LM']  edge<->leader one-way
+    # --- per-round accounting (engine path; the expectation model above
+    # ignores these).  A device's round draw is
+    #   2*lm_device*U(1±lm_jitter) + lp_device*U(1±lp_jitter),
+    # a straggler's submission is delayed by ``straggler_slowdown`` and
+    # the edge proceeds at the deadline ``deadline_mult * (2 lm + lp)``
+    # without it (deadline-based aggregation, Sec. 2.4).
+    lm_jitter: float = 0.08
+    lp_jitter: float = 0.08
+    straggler_slowdown: float = 2.5
+    deadline_mult: float = 1.5
 
 
+def round_time(p: LatencyParams) -> float:
+    """Expected single edge-round time per device: 2 E[LM] + E[LP]."""
+    return 2.0 * p.lm_device + p.lp_device
+
+
+def device_deadline(p: LatencyParams) -> float:
+    """The edge's per-round submission deadline (Sec. 2.4 deadline-based
+    system): stragglers whose delayed submission misses it are dropped and
+    the round closes at the deadline."""
+    return p.deadline_mult * round_time(p)
+
+
+# ----------------------------------------------------- scalar reference
 def total_latency(K: int, p: LatencyParams) -> float:
-    """L(K) — Sec. 5.1.4 simplified expectation form."""
+    """L(K) — Sec. 5.1.4 simplified expectation form (float64 reference)."""
     local = p.T * p.N * p.J * K * (2.0 * p.lm_device + p.lp_device)
     edge = 2.0 * p.T * p.N * p.lm_edge
     return local + edge
@@ -66,6 +106,47 @@ def edge_window(K: int, p: LatencyParams) -> float:
     return K * (p.lm_device + p.lp_device)
 
 
+# ---------------------------------------------------- dense traced model
+def k_axis(k_max: int) -> jnp.ndarray:
+    """The dense K enumeration axis: [1, 2, ..., k_max] as f32."""
+    return jnp.arange(1, k_max + 1, dtype=jnp.float32)
+
+
+def total_latency_k(p: LatencyParams, k_max: int) -> jnp.ndarray:
+    """L(K) over the dense K axis — ``[k_max]`` f32, traced.
+
+    Fields of ``p`` may be traced scalars (vmap over
+    ``dataclasses.replace``'d params batches K* solves over a grid).
+    """
+    ks = k_axis(k_max)
+    local = p.T * p.N * p.J * ks * (2.0 * p.lm_device + p.lp_device)
+    return local + 2.0 * p.T * p.N * p.lm_edge
+
+
+def edge_window_k(p: LatencyParams, k_max: int) -> jnp.ndarray:
+    """L_g(K) over the dense K axis — ``[k_max]`` f32, traced."""
+    return k_axis(k_max) * (p.lm_device + p.lp_device)
+
+
+def optimize_k_masked(latencies: jnp.ndarray, omegas: jnp.ndarray,
+                      windows: jnp.ndarray, omega_bar, consensus_latency
+                      ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Masked-argmin K* solve over dense ``[K_max]`` arrays (traced).
+
+    Returns ``(k_star, latency, feasible)`` where ``k_star`` is an i32
+    scalar (-1 when no K is feasible, in which case ``latency`` is +inf).
+    Pure ``jnp`` on same-shape arrays — jit and vmap compose, so a whole
+    grid of (params, omega_bar, L_bc) solves is one batched call.
+    """
+    feas = (omegas <= omega_bar) & (consensus_latency <= windows)
+    lat = jnp.where(feas, latencies, jnp.inf)
+    idx = jnp.argmin(lat)
+    any_f = jnp.any(feas)
+    k_star = jnp.where(any_f, idx + 1, -1).astype(jnp.int32)
+    return k_star, jnp.where(any_f, lat[idx], jnp.inf), feas
+
+
+# -------------------------------------------------------- host optimizer
 @dataclasses.dataclass
 class KOptResult:
     k_star: int
@@ -83,8 +164,21 @@ def optimize_k(p: LatencyParams, omega_fn: Callable[[int], float],
     Returns None when infeasible for every K <= k_max.
     L(K) is increasing in K while Omega(K) decreases (Corollary 1), so K* is
     the smallest feasible K — but we enumerate anyway for robustness to
-    non-monotone omega_fn.
+    non-monotone omega_fn.  ``tests/test_latency_fabric.py`` pins this
+    float64 reference against the traced dense path above on a K <= 64
+    enumeration.
     """
+    if int(k_max) != k_max or k_max < 1:
+        raise ValueError(f"optimize_k: k_max must be a positive integer, "
+                         f"got {k_max!r}")
+    k_max = int(k_max)
+    if not np.isfinite(omega_bar):
+        raise ValueError(f"optimize_k: omega_bar must be finite, got "
+                         f"{omega_bar!r} — an infinite/NaN bound makes "
+                         "constraint C1 vacuous or unsatisfiable")
+    if not np.isfinite(consensus_latency) or consensus_latency < 0:
+        raise ValueError(f"optimize_k: consensus_latency must be finite "
+                         f"and >= 0, got {consensus_latency!r}")
     ks = np.arange(1, k_max + 1)
     lat = np.array([total_latency(int(k), p) for k in ks])
     om = np.array([omega_fn(int(k)) for k in ks])

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines, hieavg
+from repro.core import latency as lat
 from repro.core import straggler as strag
 from repro.models import (cnn_accuracy_fast, cnn_loss, cnn_loss_fast,
                           init_from_specs)
@@ -137,9 +138,16 @@ class EngineInputs:
     #   are inert purely through their all-False ``valid`` rows and zero
     #   ``j_arr`` weights.
     s_valid: jnp.ndarray      # scalar i32 — real SGD steps/epoch (<= steps)
+    # --- latency plane (PR 3): precomputed per-round time draws feeding
+    # the engine's simulated clock.  Padded slots/rounds are zero.
+    dev_time: jnp.ndarray     # [T, K, N, J] f32 — per-device round time
+    #   (2*LM + LP draws, straggler submissions delayed + deadline-capped)
+    cons_time: jnp.ndarray    # [T] f32 — per-round consensus latency L_bc
+    #   (replayed RaftChain election + commit, scaled by consensus_mult)
+    edge_hop: jnp.ndarray     # scalar f32 — 2 * E[LM'] edge<->leader hop
 
 
-def replay_chain(sim) -> None:
+def replay_chain(sim) -> np.ndarray:
     """Replay the control plane exactly as the legacy loop interleaves it:
     elect → (maybe crash the leader) → commit, once per global round.
 
@@ -149,10 +157,16 @@ def replay_chain(sim) -> None:
     crash itself is applied at most once per simulator: a repeated
     ``run()`` replays the same failed edge instead of killing another
     leader (which would eventually lose Raft quorum).
+
+    Returns the per-round consensus latency ``[T]`` (election + block
+    commit elapsed simulated seconds) — the discrete-event draws the
+    engine's clock accounting consumes, so the jitted latency trajectory
+    stays pinned to the reference ``RaftChain``.
     """
     failed_edge: Optional[int] = getattr(sim, "_failed_leader", None)
+    cons = np.zeros(sim.s.t_global_rounds, np.float64)
     for t in range(1, sim.s.t_global_rounds + 1):
-        sim.chain.elect_leader()
+        _, t_elect = sim.chain.elect_leader()
         if (sim.fail_leader_at is not None and t == sim.fail_leader_at
                 and failed_edge is None):
             failed_edge = sim.chain.leader
@@ -162,7 +176,9 @@ def replay_chain(sim) -> None:
             # only from the crash round on — a repeated replay must not
             # widen the outage to earlier rounds
             sim.edge_masks[t - 1:, failed_edge] = False
-        sim.chain.commit_block(f"edges@t={t}", f"global@t={t}")
+        _, t_commit = sim.chain.commit_block(f"edges@t={t}", f"global@t={t}")
+        cons[t - 1] = t_elect + t_commit
+    return cons
 
 
 def build_inputs(sim, *, t_max: Optional[int] = None,
@@ -201,7 +217,7 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
             or (j_max is not None and j_max < max(sim.j_per_edge))):
         raise ValueError("pad targets must be >= the deployment's extents")
 
-    replay_chain(sim)
+    cons_draws = replay_chain(sim)
 
     dense_dev, valid = strag.stack_ragged(sim.dev_masks, j_max=j_max,
                                           n_max=Nm)
@@ -222,15 +238,37 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
                 continue
             flat_idx[r, d] = rng.choice(idx, size=(steps, bs), replace=True)
             flat_has[d] = 1.0
+    # per-device round-time draws (latency fabric).  A separate RNG stream
+    # from the batch sampler above: adding latency accounting must not
+    # perturb batch draws (legacy parity).  Draws cover only the REAL
+    # (T, K, D) extents so a point padded to larger grid maxima sees
+    # byte-identical times (padding stays a numeric no-op).
+    lp = sim.lat
+    lrng = np.random.default_rng([sim.seed, 0x1A7E])
+    jm = lrng.uniform(1.0 - lp.lm_jitter, 1.0 + lp.lm_jitter, (R, sim.D))
+    jp = lrng.uniform(1.0 - lp.lp_jitter, 1.0 + lp.lp_jitter, (R, sim.D))
+    draw = (2.0 * lp.lm_device * jm + lp.lp_device * jp).reshape(T, K, sim.D)
+    deadline = lat.device_deadline(lp)
+    sub = dense_dev[:R].reshape(T, K, Nm, J)    # real submission masks
+
     batch_idx = np.zeros((Tm, Km, Nm, J, Sm, bs), np.int32)
     has_data = np.zeros((Nm, J), np.float32)
+    dev_time = np.zeros((Tm, Km, Nm, J), np.float32)
     rect = flat_idx.reshape(T, K, sim.D, steps, bs)
     d = 0
     for e in range(N):
         for j in range(sim.j_per_edge[e]):
             batch_idx[:T, :K, e, j, :steps] = rect[:, :, d]
             has_data[e, j] = flat_has[d]
+            # a straggler's submission is delayed (slowdown x draw); the
+            # edge proceeds at the deadline without it — deadline-based
+            # aggregation, so its round time is capped there
+            dly = np.where(sub[:, :, e, j], draw[:, :, d],
+                           draw[:, :, d] * lp.straggler_slowdown)
+            dev_time[:T, :K, e, j] = np.minimum(dly, deadline)
             d += 1
+    cons_time = np.zeros((Tm,), np.float32)
+    cons_time[:T] = cons_draws * float(s.consensus_mult)
 
     lr = np.zeros((Tm, Km), np.float32)
     lr[:T, :K] = np.asarray(
@@ -257,7 +295,9 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
         gamma0=jnp.float32(s.gamma0), lam=jnp.float32(s.lam),
         t_cold_boot=jnp.int32(s.t_cold_boot),
         t_valid=jnp.int32(T), k_valid=jnp.int32(K),
-        n_valid=jnp.int32(N), s_valid=jnp.int32(steps))
+        n_valid=jnp.int32(N), s_valid=jnp.int32(steps),
+        dev_time=jnp.asarray(dev_time), cons_time=jnp.asarray(cons_time),
+        edge_hop=jnp.float32(2.0 * lp.lm_edge))
 
 
 # ------------------------------------------------------------- jitted run
@@ -265,11 +305,22 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
                                    "history_dtype"))
 def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
                normalize: bool = False, history_dtype=None
-               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One whole BHFL run as a single compiled program.
 
     Returns per-global-round (accuracy [T], mean local loss [T],
-    global-model round-to-round delta norm [T]).
+    global-model round-to-round delta norm [T], simulated clock [T]).
+
+    The clock is the latency fabric's cumulative simulated seconds after
+    each global round: per edge round the slowest valid device's time draw
+    (stragglers delayed, deadline-capped — see ``build_inputs``), summed
+    over the K valid edge rounds per edge, maxed over the edges the global
+    aggregation waits for (submitting edges; all valid edges when none
+    submitted), plus the edge<->leader hop and any consensus stall
+    ``max(0, L_bc - edge window)`` — constraint C2 made empirical: when
+    consensus hides inside the K-round window it costs nothing, otherwise
+    the round waits out the difference.  Rounds past ``t_valid`` repeat
+    the final valid clock (like accuracy).
 
     Dims past the point's ``t_valid``/``k_valid``/``s_valid`` extents are
     sweep-fabric padding: a padded edge round or global round computes and
@@ -311,15 +362,16 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
 
     def global_round(carry, xs):
         prev_carry = carry
-        device_w, ehist, elast, ghist, glast, prev_global = carry
-        t, bidx_t, dmask_t, emask, lr_t = xs
+        device_w, ehist, elast, ghist, glast, prev_global, clock = carry
+        t, bidx_t, dmask_t, emask, lr_t, dtime_t, cons_t = xs
 
         # ---- K edge rounds: local epoch + per-edge aggregation + sync
         def edge_round(c, xs_k):
             prev_c = c
             device_w, ehist, elast = c
-            # [N,J,steps,B], [N,J], scalar lr, round counter r, k index
-            bidx, dmask, lr, r, k = xs_k
+            # [N,J,steps,B], [N,J], scalar lr, round counter r, k index,
+            # per-device time draws [N,J]
+            bidx, dmask, lr, r, k, dtime = xs_k
 
             x = inp.train_x[bidx] * hd[:, :, None, None, None, None, None]
             y = jnp.where(hd[:, :, None, None] > 0, inp.train_y[bidx], 0)
@@ -357,14 +409,18 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
                 raise ValueError(f"unknown aggregator {aggregator!r}")
 
             new_c = (bcast_devices(edge_models), ehist, elast)
+            # per-edge elapsed: the slowest valid device closes the round
+            # (padded slots carry dev_time 0; padded edge rounds count 0)
+            el = jnp.max(jnp.where(inp.valid, dtime, 0.0), axis=1)
+            el = el * (k < inp.k_valid)
             # padded edge round (k >= k_valid): carry passes through
-            return passthru(k < inp.k_valid, new_c, prev_c), dev_loss
+            return passthru(k < inp.k_valid, new_c, prev_c), (dev_loss, el)
 
         ks = jnp.arange(K)
         rs = (t - 1) * K + ks
-        (device_w, ehist, elast), dev_losses = jax.lax.scan(
+        (device_w, ehist, elast), (dev_losses, edge_els) = jax.lax.scan(
             edge_round, (device_w, ehist, elast),
-            (bidx_t, dmask_t, lr_t, rs, ks))
+            (bidx_t, dmask_t, lr_t, rs, ks, dtime_t))
         # after the sync every device slot holds its edge model
         edge_models = jax.tree.map(lambda x: x[:, 0], device_w)
 
@@ -407,13 +463,26 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
             jnp.sum(jnp.square(a - b)) for a, b in
             zip(jax.tree.leaves(global_w), jax.tree.leaves(prev_global))))
 
+        # ---- simulated clock: the global aggregation waits for the
+        # slowest SUBMITTING edge's K-round window (all valid edges when
+        # every edge straggled), plus the edge<->leader hop, plus the
+        # consensus stall when L_bc does not hide inside the window (C2)
+        window = jnp.sum(edge_els, axis=0)             # [N]
+        valid_edge = inp.j_arr > 0
+        sub = emask & valid_edge
+        w_sub = jnp.max(jnp.where(sub, window, 0.0))
+        w_all = jnp.max(jnp.where(valid_edge, window, 0.0))
+        w = jnp.where(jnp.any(sub), w_sub, w_all)
+        round_time = w + inp.edge_hop + jnp.maximum(0.0, cons_t - w)
+
         # padded global round (t > t_valid): carry passes through, outputs
-        # repeat the final valid global model with zeroed loss/delta
+        # repeat the final valid global model/clock with zeroed loss/delta
         t_ok = t <= inp.t_valid
         out_carry = passthru(t_ok, (device_w, ehist, elast, ghist, glast,
-                                    global_w), prev_carry)
+                                    global_w, clock + round_time),
+                             prev_carry)
         return out_carry, (out_carry[5], jnp.where(t_ok, loss, 0.0),
-                           jnp.where(t_ok, delta, 0.0))
+                           jnp.where(t_ok, delta, 0.0), out_carry[6])
 
     edge0 = bcast_edges(inp.init_w)
     dev0 = bcast_devices(edge0)
@@ -422,10 +491,11 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
               jax.tree.map(jnp.zeros_like, dev0),      # d_fedavg last stores
               hieavg.init_history(edge0, history_dtype),         # @t==1
               jax.tree.map(jnp.zeros_like, edge0),
-              inp.init_w)
+              inp.init_w,
+              jnp.float32(0.0))                        # simulated clock
     xs = (jnp.arange(1, T + 1), inp.batch_idx, inp.dev_masks,
-          inp.edge_masks, inp.lr)
-    _, (globals_per_round, losses, deltas) = jax.lax.scan(
+          inp.edge_masks, inp.lr, inp.dev_time, inp.cons_time)
+    _, (globals_per_round, losses, deltas, clocks) = jax.lax.scan(
         global_round, carry0, xs)
     # test-set eval over the T round snapshots, outside the training scan.
     # lax.map (not vmap): one whole-test-set batched matmul per round with
@@ -435,7 +505,7 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
     accs = jax.lax.map(
         lambda w: cnn_accuracy_fast(w, inp.test_x, inp.test_y),
         globals_per_round)
-    return accs, losses, deltas
+    return accs, losses, deltas, clocks
 
 
 # ----------------------------------------------------------------- sweeps

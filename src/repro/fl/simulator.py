@@ -36,8 +36,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.bhfl_cnn import BHFLSetting
-from repro.core import (RaftChain, baselines, hieavg, latency as lat,
-                        straggler as strag)
+from repro.core import (RaftChain, RaftParams, baselines, hieavg,
+                        latency as lat, straggler as strag)
 from repro.data import by_class, class_images
 from repro.models import cnn_accuracy, cnn_specs, init_from_specs
 from repro.optim import paper_lr
@@ -72,6 +72,10 @@ class RunResult:
     sim_latency: float            # paper's latency model total (Sec. 5.1.4)
     blocks: int                   # committed blockchain blocks
     chain_valid: bool
+    sim_clock: Optional[np.ndarray] = None  # [T] cumulative simulated
+    #   seconds after each global round (latency fabric; engine path —
+    #   pairs with ``accuracy`` into a time-to-accuracy curve).
+    #   ``run_legacy`` leaves it None.
 
 
 # --------------------------------------------------------------- simulator
@@ -158,7 +162,17 @@ class BHFLSimulator:
         # ---- models
         self.specs = cnn_specs(setting.image_hw, 1, setting.n_classes,
                                c1=setting.cnn_c1, c2=setting.cnn_c2)
-        self.chain = RaftChain(self.N, seed=self.seed)
+        # ---- latency fabric: the Sec. 5 model for this deployment plus
+        # the Raft chain (link latency from the setting so consensus is a
+        # data-batched sweep field)
+        self.lat = lat.LatencyParams(
+            T=setting.t_global_rounds, N=self.N,
+            J=int(round(float(np.mean(self.j_per_edge)))),
+            lm_device=setting.lm_device, lp_device=setting.lp_device,
+            lm_edge=setting.lm_edge)
+        self.chain = RaftChain(
+            self.N, RaftParams(link_latency=setting.link_latency),
+            seed=self.seed)
 
     # ------------------------------------------------------------- batching
     def _epoch_batches(self, rng) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -177,9 +191,7 @@ class BHFLSimulator:
 
     def paper_latency(self) -> float:
         """The paper's latency model total (Sec. 5.1.4) for this deployment."""
-        lp = lat.LatencyParams(T=self.s.t_global_rounds, N=self.N,
-                               J=int(np.mean(self.j_per_edge)))
-        return lat.total_latency(self.s.k_edge_rounds, lp)
+        return lat.total_latency(self.s.k_edge_rounds, self.lat)
 
     # ----------------------------------------------------------------- run
     def run(self, progress: bool = False) -> RunResult:
@@ -193,21 +205,22 @@ class BHFLSimulator:
         """
         t0 = time.time()
         inp = _engine.build_inputs(self)
-        accs, losses, deltas = _engine.run_engine(
+        accs, losses, deltas, clock = _engine.run_engine(
             inp, aggregator=self.aggregator, normalize=self.normalize,
             history_dtype=self.history_dtype)
-        accs, losses, deltas = (np.asarray(accs), np.asarray(losses),
-                                np.asarray(deltas))
+        accs, losses, deltas, clock = (np.asarray(accs), np.asarray(losses),
+                                       np.asarray(deltas), np.asarray(clock))
         if progress:
             for t in range(1, self.s.t_global_rounds + 1):
                 if t % 10 == 0 or t == 1:
                     print(f"  t={t:3d} acc={accs[t - 1]:.4f} "
-                          f"loss={losses[t - 1]:.4f}")
+                          f"loss={losses[t - 1]:.4f} "
+                          f"clock={clock[t - 1]:.1f}s")
         return RunResult(
             accuracy=accs, loss=losses, grad_norm=deltas,
             wall_time=time.time() - t0, sim_latency=self.paper_latency(),
             blocks=len(self.chain.blocks) - 1,
-            chain_valid=self.chain.validate())
+            chain_valid=self.chain.validate(), sim_clock=clock)
 
     # ---------------------------------------------------------- legacy run
     def run_legacy(self, progress: bool = False) -> RunResult:

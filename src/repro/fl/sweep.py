@@ -49,10 +49,15 @@ from repro.launch.sharding import sweep_spec
 
 # ------------------------------------------------------- field classification
 #: Fields a grid may vary freely: they only change *data* (schedules, decay
-#: scalars, batch indices), never array shapes.
+#: scalars, batch indices, per-round latency draws), never array shapes.
+#: The latency-fabric fields (lm_device/lp_device/lm_edge/link_latency/
+#: consensus_mult) batch because ``build_inputs`` bakes them into the
+#: ``dev_time``/``cons_time``/``edge_hop`` planes of ``EngineInputs`` —
+#: a consensus-latency x topology x K grid is ONE compiled call.
 BATCHED_FIELDS = frozenset({
     "straggler_frac", "gamma0", "lam", "t_cold_boot", "classes_per_device",
     "lr0", "lr_decay", "permanent_stop_round", "seed",
+    "lm_device", "lp_device", "lm_edge", "link_latency", "consensus_mult",
 })
 
 #: Fields that change array shapes but that the planner absorbs by padding
@@ -145,14 +150,16 @@ class SweepResult:
 
     Rows are padded to the grid's max round count: row ``p`` is valid up to
     ``t_valid[p]`` rounds; past that, ``accuracy`` repeats the final valid
-    value and ``loss``/``grad_norm`` are 0.  ``trajectory(p)`` slices one
-    point's valid prefix.
+    value, ``loss``/``grad_norm`` are 0, and ``sim_clock`` repeats the
+    final valid clock.  ``trajectory(p)`` / ``latency_trajectory(p)`` slice
+    one point's valid prefix.
     """
     points: list              # (overrides dict, seed) per grid point
     accuracy: np.ndarray      # [P, T_max]
     loss: np.ndarray          # [P, T_max]
     grad_norm: np.ndarray     # [P, T_max]
-    sim_latency: np.ndarray   # [P]
+    sim_clock: np.ndarray     # [P, T_max] cumulative simulated seconds
+    sim_latency: np.ndarray   # [P] paper's Sec. 5.1.4 expectation totals
     blocks: np.ndarray        # [P]
     t_valid: np.ndarray       # [P] real rounds per point
 
@@ -160,6 +167,38 @@ class SweepResult:
         tv = int(self.t_valid[p])
         return (self.accuracy[p, :tv], self.loss[p, :tv],
                 self.grad_norm[p, :tv])
+
+    def latency_trajectory(self, p: int) -> tuple[np.ndarray, np.ndarray]:
+        """(simulated clock [tv], accuracy [tv]) — one point's
+        time-to-accuracy curve (the latency fabric's x-axis)."""
+        tv = int(self.t_valid[p])
+        return self.sim_clock[p, :tv], self.accuracy[p, :tv]
+
+    def time_to_accuracy(self, p: int, target: float) -> float:
+        """Simulated seconds until point ``p`` first reaches ``target``
+        test accuracy; +inf when it never does."""
+        clock, acc = self.latency_trajectory(p)
+        hit = np.flatnonzero(acc >= target)
+        return float(clock[hit[0]]) if hit.size else float("inf")
+
+    def k_star_empirical(self, target: float
+                         ) -> tuple[Optional[int], np.ndarray]:
+        """The *measured* K* selector: the grid point reaching ``target``
+        accuracy in the least simulated time.
+
+        Returns ``(best_point_index, times[P])``; the index is None when
+        no point reaches the target.  Reported next to the theoretical
+        ``omega_bound`` K* (``repro.core.optimize_k``) by
+        ``examples/latency_optimization.py`` / ``benchmarks/fig7_latency``
+        — the empirical selector sees what the bound cannot: actual
+        convergence speed and the actual consensus stalls of small-K
+        windows.
+        """
+        times = np.array([self.time_to_accuracy(p, target)
+                          for p in range(len(self.points))])
+        if not np.isfinite(times).any():
+            return None, times
+        return int(np.argmin(times)), times
 
 
 def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
@@ -276,8 +315,12 @@ def _sharded_runner(aggregator: str, normalize: bool, history_dtype,
 
 
 def execute_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto"
-                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                            jnp.ndarray]:
     """Run a plan's stacked grid as ONE compiled call.
+
+    Returns stacked per-point ``(accuracy, loss, grad_norm, sim_clock)``,
+    each ``[P, T_max]``.
 
     ``placement``: ``"auto"`` shards the point axis over the mesh ``data``
     axis when ``sweep_spec`` says it divides (falling back to single-device
@@ -330,10 +373,11 @@ def run_sweep(setting: BHFLSetting, seeds=(0,), *,
                       device_stragglers=device_stragglers,
                       edge_stragglers=edge_stragglers, normalize=normalize,
                       history_dtype=history_dtype, **sim_kw)
-    accs, losses, deltas = execute_plan(plan, mesh=mesh, placement=placement)
+    accs, losses, deltas, clocks = execute_plan(plan, mesh=mesh,
+                                                placement=placement)
     return SweepResult(
         points=plan.points,
         accuracy=np.asarray(accs), loss=np.asarray(losses),
-        grad_norm=np.asarray(deltas),
+        grad_norm=np.asarray(deltas), sim_clock=np.asarray(clocks),
         sim_latency=plan.sim_latency, blocks=plan.blocks,
         t_valid=plan.t_valid)

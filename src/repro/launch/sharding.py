@@ -71,7 +71,10 @@ SERVE_RULES = {
 # (repro.fl.sweep).  Prefers the full pod×data product when pods exist,
 # otherwise the data axis; the usual divisibility contract applies, so an
 # indivisible or single-device grid degrades to the vmap path instead of
-# failing to lower.
+# failing to lower.  Every stacked EngineInputs plane rides this one axis
+# — including the latency fabric's per-round ``dev_time``/``cons_time``
+# draws (PR 3), so a consensus-latency×topology grid shards its time
+# accounting alongside its training data with no extra rules.
 SWEEP_RULES = {
     "sweep_points": (("pod", "data"), ("data",)),
 }

@@ -1,0 +1,268 @@
+"""The latency fabric: statistical consensus model, dense-K optimizer,
+engine clock accounting, and the sweep-level K* selector.
+
+Three anchors:
+  * the closed-form Raft expectations are pinned by Monte-Carlo replay of
+    the discrete-event ``RaftChain`` (the reference implementation) over a
+    link_latency × N grid,
+  * the traced dense-K latency model is pinned to the scalar float64
+    reference on a K <= 64 enumeration,
+  * every sweep point's simulated-clock trajectory is pinned to a
+    standalone engine run (the per-point parity the fabric guarantees).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.bhfl_cnn import REDUCED
+from repro.core import (BoundParams, LatencyParams, RaftChain, RaftParams,
+                        edge_window, edge_window_k,
+                        expected_consensus_latency,
+                        expected_election_latency, omega_bound,
+                        omega_bound_k, optimize_k, optimize_k_masked,
+                        total_latency, total_latency_k)
+from repro.fl import BHFLSimulator, run_sweep
+from repro.fl.sweep import SweepResult
+
+TINY = dataclasses.replace(REDUCED, t_global_rounds=3, n_edges=3,
+                           j_per_edge=3, image_hw=8)
+KW = dict(n_train=300, n_test=100, steps_per_epoch=2)
+
+
+# ------------------------------------------- statistical consensus model
+@pytest.mark.parametrize("link,n", [(0.05, 3), (0.05, 5), (0.5, 5),
+                                    (0.2, 9)])
+def test_expected_election_latency_matches_monte_carlo(link, n):
+    """Closed-form E[election] within 5% of 400-seed RaftChain replay."""
+    p = RaftParams(link_latency=link)
+    ts = []
+    for seed in range(400):
+        chain = RaftChain(n, p, seed=seed)
+        _, t = chain.elect_leader()
+        ts.append(t)
+    mc = float(np.mean(ts))
+    cf = expected_election_latency(p, n)
+    assert abs(mc - cf) / mc < 0.05
+
+
+def test_expected_consensus_latency_matches_monte_carlo():
+    """Full per-round consensus (election + commit) within 5% of MC."""
+    p = RaftParams()
+    ts = []
+    for seed in range(400):
+        chain = RaftChain(5, p, seed=seed)
+        _, t_e = chain.elect_leader()
+        _, t_c = chain.commit_block("e", "g")
+        ts.append(t_e + t_c)
+    mc = float(np.mean(ts))
+    cf = expected_consensus_latency(p, 5)
+    assert abs(mc - cf) / mc < 0.05
+
+
+def test_expected_election_degraded_quorum():
+    """Fewer alive voters -> longer expected timeout (min of fewer
+    uniforms); below majority -> inf (elect_leader raises there)."""
+    p = RaftParams()
+    full = expected_election_latency(p, 5)
+    degraded = expected_election_latency(p, 5, n_alive=3)
+    assert degraded > full
+    assert expected_election_latency(p, 5, n_alive=2) == float("inf")
+
+
+def test_replication_only_matches_chain_consensus_latency():
+    p = RaftParams(link_latency=0.2)
+    chain = RaftChain(5, p)
+    assert expected_consensus_latency(p, 5, include_election=False) \
+        == pytest.approx(chain.consensus_latency())
+
+
+def test_elect_leader_raises_without_majority():
+    """Satellite bugfix: the win condition can never hold below majority —
+    the old code spun forever instead of raising."""
+    chain = RaftChain(5, seed=0)
+    chain.elect_leader()
+    for i in range(3):
+        chain.fail_node(i)
+    with pytest.raises(RuntimeError, match="no majority alive"):
+        chain.elect_leader()
+
+
+# ------------------------------------------------- dense-K traced model
+@pytest.mark.parametrize("lp", [LatencyParams(),
+                                LatencyParams(T=10, N=3, J=7,
+                                              lm_device=0.1, lp_device=3.0,
+                                              lm_edge=0.4)])
+def test_vectorized_latency_matches_scalar_reference(lp):
+    """total_latency_k / edge_window_k == the float64 scalar model on a
+    K <= 64 enumeration."""
+    lat = np.asarray(total_latency_k(lp, 64))
+    win = np.asarray(edge_window_k(lp, 64))
+    for i, k in enumerate(range(1, 65)):
+        np.testing.assert_allclose(lat[i], total_latency(k, lp), rtol=1e-5)
+        np.testing.assert_allclose(win[i], edge_window(k, lp), rtol=1e-5)
+
+
+def test_omega_bound_k_matches_scalar():
+    bp = BoundParams()
+    om = np.asarray(omega_bound_k(bp, 64))
+    ref = np.array([omega_bound(k, bp) for k in range(1, 65)])
+    np.testing.assert_allclose(om, ref, rtol=1e-4)
+
+
+@pytest.mark.parametrize("omega_bar,lbc", [(25.0, 0.5), (25.0, 8.0),
+                                           (9.5, 0.5), (1e-9, 0.01)])
+def test_optimize_k_masked_matches_host_optimizer(omega_bar, lbc):
+    """The traced masked-argmin K* == the host enumeration, including the
+    all-infeasible case (-1 vs None)."""
+    lp, bp = LatencyParams(), BoundParams()
+    k_star, k_lat, feas = optimize_k_masked(
+        total_latency_k(lp, 64), omega_bound_k(bp, 64),
+        edge_window_k(lp, 64), omega_bar, lbc)
+    ref = optimize_k(lp, lambda k: omega_bound(k, bp), omega_bar=omega_bar,
+                     consensus_latency=lbc)
+    if ref is None:
+        assert int(k_star) == -1 and not np.isfinite(float(k_lat))
+    else:
+        assert int(k_star) == ref.k_star
+        np.testing.assert_allclose(float(k_lat), ref.latency, rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(feas), ref.feasible)
+
+
+def test_optimize_k_masked_is_vmappable():
+    """A grid of K* solves batches into one vmapped call — the sweep-fabric
+    use case the dense axis exists for."""
+    bp = BoundParams()
+    lms = jnp.asarray([0.1, 0.51, 2.0])
+
+    def solve(lm):
+        lp = dataclasses.replace(LatencyParams(), lm_device=lm)
+        k, lat, _ = optimize_k_masked(
+            total_latency_k(lp, 32), omega_bound_k(bp, 32),
+            edge_window_k(lp, 32), 25.0, 3.0)
+        return k, lat
+
+    ks, lats = jax.vmap(solve)(lms)
+    for i, lm in enumerate([0.1, 0.51, 2.0]):
+        lp = dataclasses.replace(LatencyParams(), lm_device=lm)
+        ref = optimize_k(lp, lambda k: omega_bound(k, bp), omega_bar=25.0,
+                         consensus_latency=3.0, k_max=32)
+        assert int(ks[i]) == ref.k_star
+        np.testing.assert_allclose(float(lats[i]), ref.latency, rtol=1e-5)
+
+
+# ---------------------------------------------------- input validation
+def test_optimize_k_rejects_bad_k_max():
+    lp, bp = LatencyParams(), BoundParams()
+    for bad in (0, -3, 2.5):
+        with pytest.raises(ValueError, match="k_max"):
+            optimize_k(lp, lambda k: omega_bound(k, bp), omega_bar=25.0,
+                       consensus_latency=0.5, k_max=bad)
+
+
+def test_optimize_k_rejects_non_finite_inputs():
+    lp, bp = LatencyParams(), BoundParams()
+    for bad in (float("inf"), float("nan")):
+        with pytest.raises(ValueError, match="omega_bar"):
+            optimize_k(lp, lambda k: omega_bound(k, bp), omega_bar=bad,
+                       consensus_latency=0.5)
+        with pytest.raises(ValueError, match="consensus_latency"):
+            optimize_k(lp, lambda k: omega_bound(k, bp), omega_bar=25.0,
+                       consensus_latency=bad)
+    with pytest.raises(ValueError, match="consensus_latency"):
+        optimize_k(lp, lambda k: omega_bound(k, bp), omega_bar=25.0,
+                   consensus_latency=-1.0)
+
+
+# ------------------------------------------------- engine clock accounting
+def test_engine_clock_is_positive_and_increasing():
+    r = BHFLSimulator(TINY, "hieavg", "temporary", "temporary", **KW).run()
+    assert r.sim_clock is not None and r.sim_clock.shape == (3,)
+    assert r.sim_clock[0] > 0
+    assert np.all(np.diff(r.sim_clock) > 0)
+
+
+def test_sweep_latency_trajectories_match_standalone_runs():
+    """Per-point clock parity across a latency × topology × K grid — the
+    acceptance criterion: padding and batching never perturb a point's
+    simulated clock."""
+    overrides = [{"consensus_mult": 30.0}, {"lp_device": 4.0},
+                 {"n_edges": 2, "k_edge_rounds": 1},
+                 {"link_latency": 0.4, "k_edge_rounds": 1}]
+    sw = run_sweep(TINY, overrides=overrides, **KW)
+    for p, (ov, seed) in enumerate(sw.points):
+        s = dataclasses.replace(TINY, **ov)
+        r = BHFLSimulator(s, "hieavg", "temporary", "temporary", seed=seed,
+                          **KW).run()
+        clock, acc = sw.latency_trajectory(p)
+        np.testing.assert_allclose(clock, r.sim_clock, rtol=1e-5)
+        np.testing.assert_allclose(acc, r.accuracy, atol=1e-6)
+
+
+def test_consensus_mult_and_stragglers_slow_the_clock():
+    """Physics of the accounting: a consensus latency too large for the
+    edge window stalls rounds (C2), and stragglers push rounds toward the
+    submission deadline."""
+    base = BHFLSimulator(TINY, "hieavg", "temporary", "temporary",
+                         **KW).run()
+    slow_cons = BHFLSimulator(
+        dataclasses.replace(TINY, consensus_mult=100.0),
+        "hieavg", "temporary", "temporary", **KW).run()
+    assert slow_cons.sim_clock[-1] > base.sim_clock[-1]
+
+    quiet = BHFLSimulator(dataclasses.replace(TINY, straggler_frac=0.0),
+                          "hieavg", "none", "none", **KW).run()
+    strag = BHFLSimulator(dataclasses.replace(TINY, straggler_frac=0.5),
+                          "hieavg", "temporary", "temporary", **KW).run()
+    assert strag.sim_clock[-1] > quiet.sim_clock[-1]
+
+
+def test_clock_trajectory_reflects_deployment_scale():
+    """Sanity of magnitudes: per-round simulated time sits between the
+    expectation (2 lm + lp per edge round, K rounds) and the deadline."""
+    r = BHFLSimulator(TINY, "hieavg", "temporary", "temporary", **KW).run()
+    sim = BHFLSimulator(TINY, "hieavg", "temporary", "temporary", **KW)
+    k = TINY.k_edge_rounds
+    expect = k * (2 * TINY.lm_device + TINY.lp_device)
+    deadline = k * sim.lat.deadline_mult * (2 * TINY.lm_device
+                                            + TINY.lp_device)
+    per_round = np.diff(np.concatenate([[0.0], r.sim_clock]))
+    lo = expect * (1 - max(sim.lat.lm_jitter, sim.lat.lp_jitter))
+    hi = deadline + 2 * TINY.lm_edge + 10.0   # + hop + consensus stall slack
+    assert np.all(per_round > lo) and np.all(per_round < hi)
+
+
+# ------------------------------------------------------- K* selector
+def _fake_result(accs, clocks):
+    accs = np.asarray(accs, np.float32)
+    clocks = np.asarray(clocks, np.float32)
+    P, T = accs.shape
+    zeros = np.zeros_like(accs)
+    return SweepResult(points=[({}, 0)] * P, accuracy=accs, loss=zeros,
+                       grad_norm=zeros, sim_clock=clocks,
+                       sim_latency=np.zeros(P), blocks=np.zeros(P),
+                       t_valid=np.full(P, T))
+
+
+def test_time_to_accuracy_first_hit():
+    sw = _fake_result([[0.1, 0.5, 0.9]], [[10.0, 20.0, 30.0]])
+    assert sw.time_to_accuracy(0, 0.5) == 20.0
+    assert sw.time_to_accuracy(0, 0.95) == float("inf")
+
+
+def test_k_star_empirical_picks_fastest_point():
+    # point 1 converges in fewer rounds AND less simulated time
+    sw = _fake_result([[0.2, 0.4, 0.6], [0.5, 0.7, 0.8], [0.1, 0.2, 0.3]],
+                      [[5.0, 10.0, 15.0], [8.0, 16.0, 24.0],
+                       [1.0, 2.0, 3.0]])
+    best, times = sw.k_star_empirical(0.5)
+    assert best == 1                    # hits 0.5 at t=8 vs point 0's t=15
+    np.testing.assert_allclose(times, [15.0, 8.0, np.inf])
+
+
+def test_k_star_empirical_all_infeasible():
+    sw = _fake_result([[0.1, 0.2]], [[1.0, 2.0]])
+    best, times = sw.k_star_empirical(0.99)
+    assert best is None and not np.isfinite(times).any()

@@ -38,6 +38,8 @@ def _check_point(sw, p, r):
                                atol=1e-6)
     np.testing.assert_allclose(sw.grad_norm[p, :tv], r.grad_norm, rtol=1e-4,
                                atol=1e-6)
+    # latency fabric: per-point simulated clock parity rides every grid
+    np.testing.assert_allclose(sw.sim_clock[p, :tv], r.sim_clock, rtol=1e-5)
 
 
 # ----------------------------------------------------------- grid parity
@@ -61,13 +63,18 @@ def test_ragged_round_counts():
     np.testing.assert_array_equal(sw.t_valid, [2, 4])
     for p, (ov, seed) in enumerate(sw.points):
         _check_point(sw, p, _standalone(ov, seed))
-    # padded tail: accuracy frozen at the final valid value, metrics zeroed
+    # padded tail: accuracy/clock frozen at the final valid value, metrics
+    # zeroed
     np.testing.assert_array_equal(sw.accuracy[0, 2:],
                                   np.repeat(sw.accuracy[0, 1], 2))
     np.testing.assert_array_equal(sw.loss[0, 2:], 0.0)
     np.testing.assert_array_equal(sw.grad_norm[0, 2:], 0.0)
+    np.testing.assert_array_equal(sw.sim_clock[0, 2:],
+                                  np.repeat(sw.sim_clock[0, 1], 2))
     acc, loss, gn = sw.trajectory(0)
     assert acc.shape == loss.shape == gn.shape == (2,)
+    clock, acc_t = sw.latency_trajectory(0)
+    assert clock.shape == acc_t.shape == (2,)
 
 
 def test_varying_steps_per_epoch():
