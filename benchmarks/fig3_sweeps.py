@@ -3,12 +3,15 @@ count) on HieAvg with temporary stragglers.
 
 Runs on the sweep fabric (``repro.fl.sweep``): the J/N/K sweeps change
 array shapes per point, which used to force one compiled engine run per
-point — the planner now pads every point to the grid max, so the WHOLE
-figure (topology + straggler-fraction grid) executes as ONE compiled call,
-sharded over the device mesh when the point count divides it."""
+point.  The shape-bucketed planner groups the WHOLE figure (topology +
+straggler-fraction grid) into a few compatible-shape buckets — one
+compiled, mesh-sharded call each — instead of padding every point to the
+single grid maximum (which cost this mixed grid several-fold padding
+compute; the printed plan shows the bucket shapes and the padded-compute
+waste the heuristic settled for)."""
 from __future__ import annotations
 
-from repro.fl import run_sweep
+from repro.fl import plan_sweep, run_plan
 
 from .common import Csv, setting, sim_kwargs
 
@@ -18,10 +21,10 @@ def main() -> dict:
     csv = Csv("fig3_sweeps")
     csv.row("param", "value", "final_acc", "best_acc")
 
-    # one padded grid: every row of Fig. 3 is a point of the same call.
+    # one bucketed plan: every row of Fig. 3 is a point of the same sweep.
     # steps_per_epoch=None -> one epoch over each device's own shard
     # (paper Sec. 6.1.5) so J/N sweeps hold the total data budget fixed;
-    # the planner pads the per-point step counts to the grid max.
+    # the planner pads the per-point step counts to each bucket's max.
     grid = [("J_devices", "j_per_edge", (3, 5, 8)),
             ("N_edges", "n_edges", (3, 5, 8)),
             ("K_edge_rounds", "k_edge_rounds", (1, 2, 4)),
@@ -32,8 +35,11 @@ def main() -> dict:
             names.append((name, v))
             overrides.append({field: v})
 
-    sw = run_sweep(setting(), overrides=overrides,
-                   **sim_kwargs(steps_per_epoch=None))
+    plan = plan_sweep(setting(), overrides=overrides,
+                      **sim_kwargs(steps_per_epoch=None))
+    for line in plan.describe().splitlines():
+        print("# " + line)
+    sw = run_plan(plan)
     if len(sw.points) != len(names):       # single seed: 1 point per row
         raise RuntimeError("fig3 grid points and row labels diverged")
     for p, (name, value) in enumerate(names):

@@ -56,7 +56,10 @@ def main() -> dict:
     csv = Csv("fig7_latency")
     s = _setting()
     ovs, split = sweep_overrides()
-    sw = run_sweep(s, overrides=ovs, **KW)     # ONE compiled padded call
+    # ONE compiled padded call — max_buckets=1 pins the documented fig7
+    # protocol (and the E4 numbers) even though the K grid is shape-mixed
+    # and default bucketing would split it into a few cheaper programs
+    sw = run_sweep(s, overrides=ovs, max_buckets=1, **KW)
 
     # (a) latency vs data size: compute scales linearly with images/device
     csv.row("images_per_device", "model_round_s", "measured_round_s")

@@ -7,7 +7,7 @@ Shows the two K* selectors of the latency fabric side by side:
     (C2), with the consensus latency from the closed-form Raft model
     (``expected_consensus_latency``, pinned against the discrete-event
     ``RaftChain``);
-  * empirical — one padded sweep over the K grid runs real training on
+  * empirical — a bucketed padded sweep over the K grid runs real training on
     the batched engine, and ``SweepResult.k_star_empirical`` picks the K
     whose *measured* convergence reaches a target accuracy in the least
     simulated time.
@@ -47,7 +47,7 @@ for link in (0.05, 0.2, 0.5, 1.0, 2.0):
     else:
         print(f"  L_bc={lbc:5.2f}s -> infeasible")
 
-# 2) theoretical vs empirical K*: one padded sweep over the K grid -------
+# 2) theoretical vs empirical K*: a bucketed sweep over the K grid ------
 K_GRID = (1, 2, 4)
 setting = dataclasses.replace(REDUCED, t_global_rounds=10)
 sw = run_sweep(setting, overrides=[{"k_edge_rounds": k} for k in K_GRID],

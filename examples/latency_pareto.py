@@ -1,4 +1,4 @@
-"""Accuracy-vs-latency Pareto front: consensus delay × K, one padded sweep.
+"""Accuracy-vs-latency Pareto front: consensus delay × K, one bucketed sweep.
 
 The paper's central tension (Sec. 5): more edge rounds K converge faster
 per global round but stretch the wall clock, while the blockchain's
@@ -50,4 +50,4 @@ for secs, acc, ov in front:
 best = max(cands, key=lambda c: c[1] / c[0])
 print(f"\nbest accuracy-per-second: mult={best[2]['consensus_mult']:.0f} "
       f"K={best[2]['k_edge_rounds']} "
-      f"({len(sw.points)}-point grid, one compiled call)")
+      f"({len(sw.points)}-point grid, one bucketed sweep)")

@@ -1,13 +1,16 @@
-"""Topology grids — N edges x J devices x K edge rounds — as ONE call.
+"""Topology grids — N edges x J devices x K edge rounds — in a few calls.
 
 Before the sweep fabric this was impossible: changing ``n_edges``,
 ``j_per_edge``, or ``k_edge_rounds`` changes every engine array shape, so
-each point forced its own compiled run.  The planner
-(``repro.fl.sweep.plan_sweep``) pads every point to the grid maxima —
-padded edges/devices carry zero aggregation weight, padded edge rounds
-pass the scan carry through — and the stacked grid executes as one
-compiled program, sharded over the mesh ``data`` axis when the point count
-divides the device count.
+each point forced its own compiled run.  The shape-bucketed planner
+(``repro.fl.sweep.plan_sweep``) groups the grid into a handful of
+compatible-shape buckets — padded edges/devices carry zero aggregation
+weight, padded edge rounds pass the scan carry through — and each bucket
+executes as one compiled program, sharded over the mesh ``data`` axis when
+its point count divides the device count.  The printed plan shows exactly
+what the planner chose: bucket count, per-bucket padded shapes, and the
+padded-compute waste vs. both the no-padding ideal and the old
+pad-everything-to-the-global-max baseline.
 
   PYTHONPATH=src python examples/sweep_topology.py
 """
@@ -15,7 +18,7 @@ import dataclasses
 import itertools
 
 from repro.configs.bhfl_cnn import REDUCED
-from repro.fl import run_sweep
+from repro.fl import plan_sweep, run_plan
 
 setting = dataclasses.replace(REDUCED, t_global_rounds=8)
 
@@ -24,12 +27,15 @@ overrides = [
     for n, j, k in itertools.product((2, 4), (2, 4), (1, 2))
 ]
 
-grid = run_sweep(
+plan = plan_sweep(
     setting,
     overrides=overrides,
     normalize=True,
     n_train=1500, n_test=300, steps_per_epoch=2,
 )
+print(plan.describe())
+print()
+grid = run_plan(plan)
 
 print("N  J  K   final_acc  best_acc  latency(s)")
 for p, (ov, _seed) in enumerate(grid.points):
@@ -37,7 +43,9 @@ for p, (ov, _seed) in enumerate(grid.points):
     print(f"{ov['n_edges']}  {ov['j_per_edge']}  {ov['k_edge_rounds']}   "
           f"{acc[-1]:.4f}     {acc.max():.4f}    "
           f"{grid.sim_latency[p]:8.1f}")
-print(f"\n{len(grid.points)}-point N x J x K grid in one compiled call "
-      f"(padded to N={max(o['n_edges'] for o in overrides)}, "
-      f"J={max(o['j_per_edge'] for o in overrides)}, "
-      f"K={max(o['k_edge_rounds'] for o in overrides)}).")
+print(f"\n{len(grid.points)}-point N x J x K grid in "
+      f"{len(plan.buckets)} compiled call(s) "
+      f"(padded-compute waste "
+      f"{plan.padding_stats()['padded_flop_frac']:.1%}, vs "
+      f"{plan.padding_stats()['single_bucket_flop_frac']:.1%} had every "
+      f"point been padded to the single grid max).")

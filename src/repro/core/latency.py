@@ -30,6 +30,16 @@ engine's per-round accounting (``repro.fl.engine`` draws per-device
 compute/comm times from it; see ``build_inputs``): jitter widths, the
 straggler slowdown, and the deadline multiplier of the deadline-based
 aggregation the paper assumes.
+
+How this module relates to the engine's *empirical* clock (the "latency
+plane" of ``EngineInputs``): the expectation model here answers "what does
+Sec. 5 predict", while ``build_inputs`` draws concrete per-device round
+times from the same ``LatencyParams`` (stragglers delayed, deadline
+capped) and ``run_engine`` threads the resulting simulated clock through
+its scan — so every sweep reports a theoretical ``optimize_k`` K* next to
+a measured ``SweepResult.k_star_empirical`` one.  The full contract —
+which draws live where, what padding zeroes, what the clock charges per
+round — is documented in docs/ARCHITECTURE.md (§Latency plane).
 """
 from __future__ import annotations
 

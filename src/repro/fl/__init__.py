@@ -1,9 +1,9 @@
 from .engine import EngineInputs, build_inputs, run_engine
 from .simulator import BHFLSimulator, RunResult, run_comparison
-from .sweep import (SweepPlan, SweepResult, execute_plan, plan_sweep,
-                    run_sweep)
+from .sweep import (SweepBucket, SweepPlan, SweepResult, execute_plan,
+                    plan_sweep, run_plan, run_sweep)
 
 __all__ = ["BHFLSimulator", "RunResult", "run_comparison",
            "EngineInputs", "build_inputs", "run_engine",
-           "SweepPlan", "SweepResult", "execute_plan", "plan_sweep",
-           "run_sweep"]
+           "SweepBucket", "SweepPlan", "SweepResult", "execute_plan",
+           "plan_sweep", "run_plan", "run_sweep"]

@@ -19,8 +19,18 @@ compiles an ENTIRE run into one program:
     every array dim (T/K/N/J/steps) past a deployment's own extents, and
     ``run_engine`` treats everything padded as a numeric no-op — this is
     what lets the sweep planner (``repro.fl.sweep``) batch grid points that
-    disagree on topology or round counts into ONE compiled, mesh-sharded
-    call.
+    disagree on topology or round counts into a handful of compiled,
+    mesh-sharded calls (shape buckets),
+  * the data plane is *seed-major*: train/test/init arrays carry a leading
+    ``[n_seeds]`` axis and every run gathers its own dataset by the scalar
+    ``seed_idx`` — under the sweep fabric the data plane is shared across
+    all grid points (vmap ``in_axes=None`` / ``shard_map`` replicated), so
+    a multi-seed confidence grid holds the *distinct-seed* count in device
+    memory, not one dataset copy per point.
+
+The padding/validity-mask contract and the seed-dedup invariants are
+documented in docs/ARCHITECTURE.md (§Engine); tests/test_sweep_fabric.py
+enforces both.
 
 The Raft chain (control plane, no model numerics) is replayed host-side
 *before* the jitted run: it consumes the same RNG stream in the same order as
@@ -107,20 +117,28 @@ class EngineInputs:
     shard_maps over a leading point axis); gamma0/lam/t_cold_boot ride along
     as scalars so decay-factor sweeps are data, not recompiles.
 
-    The array dims T/K/N/J/steps are *grid maxima* when the inputs were
+    The array dims T/K/N/J/steps are *bucket maxima* when the inputs were
     built with pad targets (``build_inputs(..., t_max=...)``): the
     ``t_valid``/``k_valid``/``n_valid``/``s_valid`` scalars carry each
     point's real extents, and ``run_engine`` turns everything padded into a
     numeric no-op — padded device/edge slots get zero aggregation weight
     (``valid``/``j_arr``), padded edge rounds and global rounds carry the
     scan state through unchanged, padded SGD steps apply no update.
+
+    Data-plane fields (train/test/init, ``sweep.SHARED_DATA_FIELDS``) are
+    *seed-major*: a leading ``[S]`` axis of distinct seeds, gathered per
+    run by the scalar ``seed_idx``.  The sweep fabric never stacks them
+    along the point axis — they are shared (replicated) across the whole
+    grid, so device-resident data scales with the distinct-seed count.
+    A standalone ``build_inputs`` emits ``S=1`` with ``seed_idx=0``.
     """
 
-    train_x: jnp.ndarray      # [n_train, H, W, 1] f32
-    train_y: jnp.ndarray      # [n_train] i32
-    test_x: jnp.ndarray       # [n_test, H, W, 1] f32
-    test_y: jnp.ndarray       # [n_test] i32
-    init_w: PyTree            # global model at t=0
+    train_x: jnp.ndarray      # [S, n_train, H, W, 1] f32 (seed-major)
+    train_y: jnp.ndarray      # [S, n_train] i32
+    test_x: jnp.ndarray       # [S, n_test, H, W, 1] f32
+    test_y: jnp.ndarray       # [S, n_test] i32
+    init_w: PyTree            # [S, ...] global model at t=0, per seed
+    seed_idx: jnp.ndarray     # scalar i32 — this run's row of the [S] axis
     batch_idx: jnp.ndarray    # [T, K, N, J, steps, B] i32 into train_x
     has_data: jnp.ndarray     # [N, J] f32 — 0 for empty-shard/padded slots
     valid: jnp.ndarray        # [N, J] bool — real device slots
@@ -206,7 +224,10 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
     buffers instead of converting this sim's own — the sweep planner's
     same-seed dedup (the caller guarantees the seed and data geometry
     match, which makes those arrays byte-identical; see
-    ``sweep.SHARED_DATA_FIELDS``).
+    ``sweep.SHARED_DATA_FIELDS``).  The emitted data plane always carries
+    the seed-major ``[S=1]`` leading axis with ``seed_idx=0``; the planner
+    concatenates distinct-seed planes and rewrites ``seed_idx`` per point
+    when it stacks a grid.
     """
     s = sim.s
     T, K, N = s.t_global_rounds, s.k_edge_rounds, sim.N
@@ -281,13 +302,20 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
         train_x, train_y = src.train_x, src.train_y
         test_x, test_y, init_w = src.test_x, src.test_y, src.init_w
     else:
-        train_x, train_y = jnp.asarray(sim.train_x), jnp.asarray(sim.train_y)
-        test_x, test_y = jnp.asarray(sim.test_x), jnp.asarray(sim.test_y)
-        init_w = init_from_specs(sim.specs, jax.random.key(sim.seed))
+        # [None]: the seed-major [S=1] axis (a reshape of the device
+        # buffer, not a copy)
+        train_x = jnp.asarray(sim.train_x)[None]
+        train_y = jnp.asarray(sim.train_y)[None]
+        test_x = jnp.asarray(sim.test_x)[None]
+        test_y = jnp.asarray(sim.test_y)[None]
+        init_w = jax.tree.map(
+            lambda x: x[None],
+            init_from_specs(sim.specs, jax.random.key(sim.seed)))
 
     return EngineInputs(
         train_x=train_x, train_y=train_y,
         test_x=test_x, test_y=test_y, init_w=init_w,
+        seed_idx=jnp.int32(0),
         batch_idx=jnp.asarray(batch_idx),
         has_data=jnp.asarray(has_data), valid=jnp.asarray(valid),
         dev_masks=jnp.asarray(dev_masks), edge_masks=jnp.asarray(edge_masks),
@@ -329,6 +357,15 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
     applies no update, and padded edge/device slots carry zero aggregation
     weight via ``valid``/``j_arr``.  Output rounds past ``t_valid`` repeat
     the final valid global model (accuracy) and report 0 loss/delta.
+
+    Training data, the test split, and the init weights are gathered from
+    the seed-major ``[S]`` data plane by ``inp.seed_idx``.  The seed index
+    is folded straight into the batch gather (``train_x[seed_idx, bidx]``)
+    so no per-point copy of the *training set* — the dominant input — is
+    ever materialized; the test/init gathers are whole-row, so the sweep
+    fabric keeps ``seed_idx`` unmapped on single-seed plans (the gathers
+    then stay unbatched: one shared test split under vmap) and only
+    multi-seed plans pay a per-point ``[P, n_test, ...]`` eval gather.
 
     ``history_dtype`` overrides HieAvg's history storage dtype end-to-end
     (EXPERIMENTS.md X1): bf16 cuts the two-model-copies-per-layer memory
@@ -373,8 +410,10 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
             # per-device time draws [N,J]
             bidx, dmask, lr, r, k, dtime = xs_k
 
-            x = inp.train_x[bidx] * hd[:, :, None, None, None, None, None]
-            y = jnp.where(hd[:, :, None, None] > 0, inp.train_y[bidx], 0)
+            x = inp.train_x[inp.seed_idx, bidx] \
+                * hd[:, :, None, None, None, None, None]
+            y = jnp.where(hd[:, :, None, None] > 0,
+                          inp.train_y[inp.seed_idx, bidx], 0)
             pflat, loss = train_epoch_body(
                 flat(device_w), x.reshape((D, steps, bs) + x.shape[4:]),
                 y.reshape(D, steps, bs), lr, step_ok=step_ok)
@@ -484,14 +523,17 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
         return out_carry, (out_carry[5], jnp.where(t_ok, loss, 0.0),
                            jnp.where(t_ok, delta, 0.0), out_carry[6])
 
-    edge0 = bcast_edges(inp.init_w)
+    # this run's row of the seed-major data plane (scalar gather per leaf —
+    # the full train-set gather happens inside the batch indexing above)
+    init_w = jax.tree.map(lambda v: v[inp.seed_idx], inp.init_w)
+    edge0 = bcast_edges(init_w)
     dev0 = bcast_devices(edge0)
     carry0 = (dev0,
               hieavg.init_history_batched(dev0, history_dtype),  # @r==0
               jax.tree.map(jnp.zeros_like, dev0),      # d_fedavg last stores
               hieavg.init_history(edge0, history_dtype),         # @t==1
               jax.tree.map(jnp.zeros_like, edge0),
-              inp.init_w,
+              init_w,
               jnp.float32(0.0))                        # simulated clock
     xs = (jnp.arange(1, T + 1), inp.batch_idx, inp.dev_masks,
           inp.edge_masks, inp.lr, inp.dev_time, inp.cons_time)
@@ -502,14 +544,17 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
     # round-at-a-time peak memory — vmapping all T rounds through the 9x
     # im2col intermediate is O(T * n_test * H * W * 9c) and OOMs at the
     # paper's DEFAULT sizes.
+    test_x = inp.test_x[inp.seed_idx]
+    test_y = inp.test_y[inp.seed_idx]
     accs = jax.lax.map(
-        lambda w: cnn_accuracy_fast(w, inp.test_x, inp.test_y),
+        lambda w: cnn_accuracy_fast(w, test_x, test_y),
         globals_per_round)
     return accs, losses, deltas, clocks
 
 
 # ----------------------------------------------------------------- sweeps
 # The sweep subsystem lives in ``repro.fl.sweep``: a shape-polymorphic
-# planner (grids may change topology/rounds; points are padded to the grid
-# max) plus mesh placement (shard_map over the data axis, vmap fallback).
+# planner (grids may change topology/rounds; points are grouped into shape
+# buckets and padded to each bucket's maxima) plus mesh placement
+# (shard_map over the data axis per bucket, vmap fallback).
 # ``run_sweep``/``SweepResult`` are re-exported there and via ``repro.fl``.

@@ -1,35 +1,60 @@
-"""Sweep fabric — shape-polymorphic sweep planner, sharded over the mesh.
+"""Sweep fabric — shape-bucketed sweep planner, sharded over the mesh.
 
 The paper's headline claims are *grids*: convergence vs. straggler fraction
 (Fig. 3), non-IID skew (Fig. 4), topology (N edges x J devices x K edge
 rounds), consensus latency.  PR 1's ``run_sweep`` could only vmap grids
-whose points agreed on every array shape; anything touching topology or
-round counts fell back to one compiled engine run per point.
+whose points agreed on every array shape; PR 2 padded every point to the
+single grid maximum (one compiled call, but fig3's mixed J/N/K grid paid
+several-fold padding compute); this PR buckets.
 
-This module turns sweeps into a proper three-layer subsystem:
+The module is a three-layer subsystem:
 
   Planner   ``plan_sweep`` classifies override fields (batchable / paddable
-            / unsupported-with-a-clear-error), builds every grid point's
-            ``EngineInputs`` padded to the grid maxima (T/K/N/J/steps), and
-            stacks them along a leading point axis.  Padded extents are
-            numeric no-ops inside ``run_engine``: padded edges/devices
-            carry zero aggregation weight, padded rounds pass the scan
-            carry through, padded SGD steps apply no update.  Each point's
-            real extents ride along as ``t_valid``/``k_valid``/``n_valid``/
-            ``s_valid`` scalars.
+            / unsupported-with-a-clear-error), groups grid points into a
+            small number of *shape buckets* — compatible ``t/k/n/j/steps``
+            maxima chosen by a greedy padding-waste heuristic
+            (``_bucket_points``) — and builds every point's
+            ``EngineInputs`` padded to its *bucket's* maxima, stacked along
+            a leading point axis per bucket.  Padded extents are numeric
+            no-ops inside ``run_engine``; each point's real extents ride
+            along as ``t_valid``/``k_valid``/``n_valid``/``s_valid``.
+            The data plane (train/test/init, ``SHARED_DATA_FIELDS``) is
+            *seed-deduped*: distinct-seed datasets are stacked once along
+            a ``[n_seeds]`` axis shared by every bucket, and each point
+            gathers its own row by ``seed_idx`` inside the engine — a
+            10-seed confidence grid holds the distinct-seed count in
+            device memory, never one dataset copy per point.
 
-  Placement ``execute_plan`` shards the stacked point axis across the mesh
-            ``data`` axis with ``shard_map`` (``launch.sharding.SWEEP_RULES``
-            via ``sweep_spec``) and vmaps within each shard.  The same
-            autoscaling contract as the weight shardings applies: if the
-            point count does not divide a >1 mesh axis, the whole grid runs
-            as a single-device ``vmap`` instead of failing to lower.
+  Placement ``execute_plan`` runs each bucket as one compiled call: the
+            stacked point axis shards across the mesh ``data`` axis with
+            ``shard_map`` (``launch.sharding.SWEEP_RULES`` via
+            ``sweep_spec``), vmapping within each shard; the data plane is
+            replicated (``sweep_data_spec`` / vmap ``in_axes=None``).  The
+            same autoscaling contract as the weight shardings applies per
+            bucket: if a bucket's point count does not divide a >1 mesh
+            axis, that bucket runs as a single-device ``vmap`` instead of
+            failing to lower.  Per-bucket outputs are merged back into one
+            ``[P, T_max]`` stack in original point order (rows from a
+            narrower bucket extend by the engine's own tail convention:
+            accuracy/clock repeat the final value, loss/grad are 0).
 
-  Callers   ``run_sweep`` is the ``BHFLSimulator``-facing wrapper:
-            plan -> execute -> package a ``SweepResult``.  It is what
+  Callers   ``run_sweep`` (= ``plan_sweep`` + ``run_plan``) is the
+            ``BHFLSimulator``-facing wrapper returning a ``SweepResult``.
             benchmarks/fig3_sweeps.py, fig4_heterogeneity.py, and the
-            examples drive; tests/test_sweep_fabric.py pins every padded,
-            sharded point to a standalone ``run_engine`` run.
+            examples drive it; ``SweepPlan.describe()`` renders the chosen
+            bucket plan.  tests/test_sweep_fabric.py pins every padded,
+            bucketed, sharded point to a standalone ``run_engine`` run.
+
+Invariants (see docs/ARCHITECTURE.md §Sweep):
+  * every grid point lands in exactly one bucket; merged outputs are in
+    original point order regardless of bucketing,
+  * bucketing never changes numerics — only padding extents differ, and
+    padding is inert by the engine contract,
+  * at most ``max_buckets`` compiled programs per plan (default 4), and
+    voluntary merges keep total padded compute within ``bucket_waste``
+    of the no-padding ideal,
+  * the data plane rows are distinct seeds in first-appearance order; all
+    buckets alias the SAME device buffers.
 """
 from __future__ import annotations
 
@@ -45,7 +70,7 @@ from jax.sharding import PartitionSpec
 from repro.configs.bhfl_cnn import BHFLSetting
 from repro.fl.engine import EngineInputs, build_inputs, run_engine
 from repro.launch.mesh import make_sweep_mesh
-from repro.launch.sharding import sweep_spec
+from repro.launch.sharding import sweep_data_spec, sweep_spec
 
 # ------------------------------------------------------- field classification
 #: Fields a grid may vary freely: they only change *data* (schedules, decay
@@ -61,7 +86,7 @@ BATCHED_FIELDS = frozenset({
 })
 
 #: Fields that change array shapes but that the planner absorbs by padding
-#: every point to the grid maximum.
+#: every point to its shape bucket's maximum.
 PADDED_FIELDS = frozenset({
     "n_edges", "j_per_edge", "k_edge_rounds", "t_global_rounds",
 })
@@ -92,31 +117,109 @@ def _validate_overrides(overrides: list[dict]) -> None:
             # remaining fields are BATCHED or PADDED — both fine.
 
 
-# ------------------------------------------------------------------ planner
+# ------------------------------------------------------------ shape buckets
 #: ``EngineInputs`` fields that depend only on the seed and the
-#: (grid-constant) data/model geometry — byte-identical across same-seed
-#: points, so the planner keeps ONE copy and replicates it at placement
-#: time instead of stacking P copies on device (the training set dominates
-#: input bytes at real grid sizes).
+#: (grid-constant) data/model geometry.  They form the seed-major data
+#: plane: ONE ``[n_seeds, ...]`` stack shared by every bucket (vmap
+#: ``in_axes=None`` / shard_map replicated), gathered per point by
+#: ``seed_idx`` inside the engine — never stacked along the point axis.
 SHARED_DATA_FIELDS = frozenset({"train_x", "train_y", "test_x", "test_y",
                                 "init_w"})
 
+_SHAPE_KEYS = ("t", "k", "n", "j", "steps")
 
-def _per_field(data_shared: bool, on_shared, on_stacked) -> EngineInputs:
+
+def _vol(ext: dict) -> int:
+    """Padded-compute proxy for one point at extents ``ext``: training
+    work scales with rounds x devices x steps = t*k*(n*j)*steps."""
+    return ext["t"] * ext["k"] * ext["n"] * ext["j"] * ext["steps"]
+
+
+def _bucket_points(extents: list[dict], max_buckets: int,
+                   bucket_waste: float) -> list[dict]:
+    """Group points into shape buckets under a padding-waste heuristic.
+
+    Greedy agglomerative merge: start with one bucket per distinct extent
+    tuple (identical shapes are free to share), then repeatedly merge the
+    pair whose elementwise-max envelope adds the least padded compute.  A
+    merge is *forced* while the bucket count exceeds ``max_buckets`` (the
+    compiled-program budget) and *voluntary* while total padded compute
+    stays within ``bucket_waste`` x the no-padding ideal — fewer compiles
+    for bounded waste.  Returns ``[{"ids": [point indices], "ext": {...}}]``
+    ordered by first point id, ids ascending within each bucket.
+    """
+    if max_buckets < 1:
+        raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
+    by_key: dict[tuple, list[int]] = {}
+    for i, e in enumerate(extents):
+        by_key.setdefault(tuple(e[k] for k in _SHAPE_KEYS), []).append(i)
+    buckets = [{"ids": ids, "ext": dict(zip(_SHAPE_KEYS, key))}
+               for key, ids in by_key.items()]
+    ideal = sum(_vol(e) for e in extents)
+
+    def cost(b):
+        return len(b["ids"]) * _vol(b["ext"])
+
+    total = sum(cost(b) for b in buckets)
+    while len(buckets) > 1:
+        best = None
+        for x in range(len(buckets)):
+            for y in range(x + 1, len(buckets)):
+                ext = {k: max(buckets[x]["ext"][k], buckets[y]["ext"][k])
+                       for k in _SHAPE_KEYS}
+                delta = ((len(buckets[x]["ids"]) + len(buckets[y]["ids"]))
+                         * _vol(ext) - cost(buckets[x]) - cost(buckets[y]))
+                if best is None or delta < best[0]:
+                    best = (delta, x, y, ext)
+        delta, x, y, ext = best
+        if len(buckets) > max_buckets or total + delta <= bucket_waste * ideal:
+            merged = {"ids": buckets[x]["ids"] + buckets[y]["ids"],
+                      "ext": ext}
+            buckets = [b for i, b in enumerate(buckets)
+                       if i not in (x, y)] + [merged]
+            total += delta
+        else:
+            break
+    for b in buckets:
+        b["ids"].sort()
+    buckets.sort(key=lambda b: b["ids"][0])
+    return buckets
+
+
+def _per_field(on_shared, on_stacked, seed_shared: bool) -> EngineInputs:
     """EngineInputs-shaped pytree prefix: one marker per field (used for
-    ``vmap`` in_axes and ``shard_map`` in_specs)."""
-    return EngineInputs(**{
-        f.name: (on_shared if data_shared and f.name in SHARED_DATA_FIELDS
-                 else on_stacked)
-        for f in dataclasses.fields(EngineInputs)})
+    ``vmap`` in_axes and ``shard_map`` in_specs).  Data-plane fields are
+    always shared; ``seed_idx`` is shared too on single-seed plans
+    (``seed_shared`` — keeping it unmapped keeps the engine's test/init
+    gathers unbatched, so vmap never materializes P identical test-set
+    copies); everything else rides the stacked point axis."""
+    def mark(name):
+        if name in SHARED_DATA_FIELDS:
+            return on_shared
+        if name == "seed_idx" and seed_shared:
+            return on_shared
+        return on_stacked
+
+    return EngineInputs(**{f.name: mark(f.name)
+                           for f in dataclasses.fields(EngineInputs)})
 
 
-def _stack_points(inputs: list[EngineInputs],
-                  data_shared: bool) -> EngineInputs:
+def _stack_points(inputs: list[EngineInputs], data_plane: dict,
+                  seed_ids: list[int], seed_shared: bool) -> EngineInputs:
+    """Stack one bucket's per-point inputs along a leading point axis.
+
+    Data-plane fields take the plan-wide seed-major stack (same device
+    buffers in every bucket); ``seed_idx`` becomes the per-point ``[Pb]``
+    gather index (or stays the scalar 0 on single-seed plans, matching
+    ``_per_field``'s shared marker); everything else stacks point-major.
+    """
     def one(name):
+        if name == "seed_idx":
+            return jnp.int32(0) if seed_shared \
+                else jnp.asarray(seed_ids, jnp.int32)
+        if name in SHARED_DATA_FIELDS:
+            return data_plane[name]
         vals = [getattr(i, name) for i in inputs]
-        if data_shared and name in SHARED_DATA_FIELDS:
-            return vals[0]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *vals)
 
     return EngineInputs(**{f.name: one(f.name)
@@ -124,24 +227,84 @@ def _stack_points(inputs: list[EngineInputs],
 
 
 @dataclasses.dataclass
-class SweepPlan:
-    """A compiled-call-ready sweep: stacked padded inputs + metadata.
+class SweepBucket:
+    """One shape bucket: a compiled-call-ready stack of compatible points."""
+    point_ids: list            # indices into the plan's point order
+    inputs: EngineInputs       # stacked [Pb, ...], padded to bucket maxima
+    grid_max: dict             # this bucket's {"t","k","n","j","steps"}
 
-    Holds only host scalars per point besides ``inputs`` — the planning
-    simulators (and their schedules/chains) are released once their
-    latency/block summaries are extracted, so plan lifetime does not pin
-    P sets of host state.
+
+@dataclasses.dataclass
+class SweepPlan:
+    """A bucketed, compiled-call-ready sweep: stacked inputs + metadata.
+
+    Holds only host scalars per point besides the bucket inputs — the
+    planning simulators (and their schedules/chains) are released once
+    their latency/block summaries are extracted, so plan lifetime does not
+    pin P sets of host state.  All buckets alias ONE seed-major data plane
+    (``n_seeds`` rows), so plan memory scales with distinct seeds.
     """
     points: list                    # (overrides dict, seed) per grid point
-    inputs: EngineInputs            # stacked [P, ...], padded to grid maxima
-    grid_max: dict                  # {"t":..,"k":..,"n":..,"j":..,"steps":..}
+    buckets: list                   # [SweepBucket], first-point order
+    grid_max: dict                  # global {"t","k","n","j","steps"} maxima
     aggregator: str
     normalize: bool
     history_dtype: Any
-    data_shared: bool               # train/test/init kept as ONE copy
+    n_seeds: int                    # distinct seeds in the data plane
     sim_latency: np.ndarray         # [P] paper latency model totals
     blocks: np.ndarray              # [P] committed blocks per point
     t_valid: np.ndarray             # [P] real rounds per point
+    point_volume: np.ndarray        # [P] no-padding compute proxy per point
+
+    @property
+    def inputs(self) -> EngineInputs:
+        """The single bucket's stacked inputs (single-bucket plans only —
+        the PR 2 shape; multi-bucket plans use ``plan.buckets[i].inputs``)."""
+        if len(self.buckets) != 1:
+            raise ValueError(
+                f"plan has {len(self.buckets)} shape buckets; per-bucket "
+                "inputs live at plan.buckets[i].inputs")
+        return self.buckets[0].inputs
+
+    def padding_stats(self) -> dict:
+        """Padded-compute accounting for the chosen bucket plan.
+
+        ``padded_flop_frac`` is the fraction of the plan's compute volume
+        that is padding (0 = no waste); ``single_bucket_flop_frac`` is the
+        same quantity had every point been padded to the global maxima
+        (the PR 2 baseline this planner retires).
+        """
+        ideal = int(self.point_volume.sum())
+        padded = sum(len(b.point_ids) * _vol(b.grid_max)
+                     for b in self.buckets)
+        single = len(self.points) * _vol(self.grid_max)
+        return {
+            "ideal_volume": ideal,
+            "padded_volume": padded,
+            "single_bucket_volume": single,
+            "padded_flop_frac": 1.0 - ideal / padded,
+            "single_bucket_flop_frac": 1.0 - ideal / single,
+            "buckets": [dict(points=len(b.point_ids), **b.grid_max)
+                        for b in self.buckets],
+        }
+
+    def describe(self) -> str:
+        """Human-readable bucket plan (what the planner chose and why it's
+        cheap) — logged by examples/sweep_topology.py and fig3_sweeps."""
+        st = self.padding_stats()
+        lines = [
+            f"sweep plan: {len(self.points)} points -> "
+            f"{len(self.buckets)} shape bucket(s), {self.n_seeds} distinct "
+            f"seed(s) in the data plane; padded-compute waste "
+            f"{st['padded_flop_frac']:.1%} (single-bucket baseline "
+            f"{st['single_bucket_flop_frac']:.1%})"]
+        for i, b in enumerate(self.buckets):
+            g = b.grid_max
+            lines.append(
+                f"  bucket {i}: {len(b.point_ids)} point(s) padded to "
+                f"T={g['t']} K={g['k']} N={g['n']} J={g['j']} "
+                f"steps={g['steps']}")
+        return "\n".join(lines)
 
 
 @dataclasses.dataclass
@@ -152,7 +315,8 @@ class SweepResult:
     ``t_valid[p]`` rounds; past that, ``accuracy`` repeats the final valid
     value, ``loss``/``grad_norm`` are 0, and ``sim_clock`` repeats the
     final valid clock.  ``trajectory(p)`` / ``latency_trajectory(p)`` slice
-    one point's valid prefix.
+    one point's valid prefix.  Rows are in original point order no matter
+    how the planner bucketed them.
     """
     points: list              # (overrides dict, seed) per grid point
     accuracy: np.ndarray      # [P, T_max]
@@ -207,14 +371,22 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
                device_stragglers: str = "temporary",
                edge_stragglers: str = "temporary",
                normalize: bool = False, history_dtype=None,
+               max_buckets: int = 4, bucket_waste: float = 1.25,
                **sim_kw) -> SweepPlan:
-    """Precompute a grid (overrides x seeds) into one stacked ``EngineInputs``.
+    """Precompute a grid (overrides x seeds) into bucketed ``EngineInputs``.
 
     ``overrides`` entries may change topology and round counts
-    (``PADDED_FIELDS``) — every point is padded to the grid maxima so the
-    stack is rectangular.  ``j_per_edge`` additionally accepts a per-edge
-    list (Fig. 4b inconsistent-J deployments).  Geometry fields
+    (``PADDED_FIELDS``) — points are grouped into at most ``max_buckets``
+    shape buckets by the padding-waste heuristic (``bucket_waste`` caps the
+    total padded-compute ratio voluntary merges may reach; see
+    ``_bucket_points``), and every point is padded to its bucket's maxima.
+    ``max_buckets=1`` forces the single global-max bucket (the PR 2
+    behavior).  ``j_per_edge`` additionally accepts a per-edge list
+    (Fig. 4b inconsistent-J deployments).  Geometry fields
     (``UNSUPPORTED_FIELDS``) raise immediately with the field named.
+
+    Datasets/init weights are seed-deduped: one ``[n_seeds]`` stack shared
+    by every bucket, with per-point ``seed_idx`` gathers inside the engine.
     """
     from repro.fl.simulator import BHFLSimulator  # lazy: avoid import cycle
 
@@ -245,109 +417,172 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
             device_stragglers, edge_stragglers, normalize=normalize,
             seed=seed, **kw))
 
-    grid_max = {
-        "t": max(s.s.t_global_rounds for s in sims),
-        "k": max(s.s.k_edge_rounds for s in sims),
-        "n": max(s.N for s in sims),
-        "j": max(max(s.j_per_edge) for s in sims),
-        "steps": max(s.steps for s in sims),
-    }
-    # dataset/init dedup: those arrays are a pure function of (seed,
-    # geometry), and geometry is grid-constant — points with the same
-    # seed reuse the first such point's device buffers, so H2D puts scale
-    # with the number of distinct seeds, not grid points.  With exactly
-    # one seed the stack itself is also elided (``data_shared``: one
-    # unstacked copy, replicated at placement time).
-    data_shared = len({s.seed for s in sims}) == 1
-    first_by_seed: dict = {}
-    inputs: list[EngineInputs] = []
+    extents = [{"t": s.s.t_global_rounds, "k": s.s.k_edge_rounds,
+                "n": s.N, "j": max(s.j_per_edge), "steps": s.steps}
+               for s in sims]
+    grid_max = {k: max(e[k] for e in extents) for k in _SHAPE_KEYS}
+    groups = _bucket_points(extents, max_buckets, bucket_waste)
+
+    # seed-dedup: data/init arrays are a pure function of (seed, geometry),
+    # and geometry is grid-constant — the first point of each distinct seed
+    # becomes that seed's data-plane row (its device buffers are reused by
+    # every same-seed point via share_data_from, so H2D puts scale with
+    # distinct seeds), and the rows concatenate into ONE [n_seeds] stack
+    # every bucket aliases.
+    seed_to_idx: dict = {}
     for s in sims:
-        inp = build_inputs(
-            s, t_max=grid_max["t"], k_max=grid_max["k"],
-            n_max=grid_max["n"], j_max=grid_max["j"],
-            steps_max=grid_max["steps"],
-            share_data_from=first_by_seed.get(s.seed))
-        first_by_seed.setdefault(s.seed, inp)
-        inputs.append(inp)
-    shapes = [jax.tree.map(jnp.shape, i) for i in inputs]
-    if any(s != shapes[0] for s in shapes[1:]):
-        raise ValueError(
-            "sweep grid points disagree on array shapes even after padding "
-            "— the base setting/sim kwargs (image size, batch size, data "
-            "sizes) must be identical across the grid")
-    stacked = _stack_points(inputs, data_shared)
-    return SweepPlan(points=points, inputs=stacked, grid_max=grid_max,
+        seed_to_idx.setdefault(s.seed, len(seed_to_idx))
+    first_by_seed: dict = {}
+    built: list = []          # (group, [EngineInputs per point])
+    for g in groups:
+        ext = g["ext"]
+        binputs = []
+        for i in g["ids"]:
+            s = sims[i]
+            inp = build_inputs(
+                s, t_max=ext["t"], k_max=ext["k"], n_max=ext["n"],
+                j_max=ext["j"], steps_max=ext["steps"],
+                share_data_from=first_by_seed.get(s.seed))
+            first_by_seed.setdefault(s.seed, inp)
+            binputs.append(inp)
+        shapes = [jax.tree.map(jnp.shape, i) for i in binputs]
+        if any(sh != shapes[0] for sh in shapes[1:]):
+            raise ValueError(
+                "sweep grid points disagree on array shapes even after "
+                "padding — the base setting/sim kwargs (image size, batch "
+                "size, data sizes) must be identical across the grid")
+        built.append((g, binputs))
+
+    reps = [first_by_seed[seed] for seed in seed_to_idx]
+    data_plane = {}
+    for name in SHARED_DATA_FIELDS:
+        vals = [getattr(r, name) for r in reps]
+        data_plane[name] = vals[0] if len(vals) == 1 else jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *vals)
+
+    seed_shared = len(seed_to_idx) == 1
+    buckets = [SweepBucket(
+        point_ids=list(g["ids"]),
+        inputs=_stack_points(binputs, data_plane,
+                             [seed_to_idx[sims[i].seed] for i in g["ids"]],
+                             seed_shared),
+        grid_max=dict(g["ext"]))
+        for g, binputs in built]
+    return SweepPlan(points=points, buckets=buckets, grid_max=grid_max,
                      aggregator=aggregator, normalize=normalize,
-                     history_dtype=history_dtype, data_shared=data_shared,
+                     history_dtype=history_dtype,
+                     n_seeds=len(seed_to_idx),
                      sim_latency=np.asarray([s.paper_latency()
                                              for s in sims]),
                      blocks=np.asarray([len(s.chain.blocks) - 1
                                         for s in sims]),
                      t_valid=np.asarray([s.s.t_global_rounds
-                                         for s in sims]))
+                                         for s in sims]),
+                     point_volume=np.asarray([_vol(e) for e in extents]))
 
 
 # ---------------------------------------------------------------- placement
 @functools.lru_cache(maxsize=None)
 def _vmap_runner(aggregator: str, normalize: bool, history_dtype,
-                 data_shared: bool):
+                 seed_shared: bool):
     def runner(inp):
         return run_engine(inp, aggregator=aggregator, normalize=normalize,
                           history_dtype=history_dtype)
 
-    return jax.vmap(runner, in_axes=(_per_field(data_shared, None, 0),))
+    return jax.vmap(runner, in_axes=(_per_field(None, 0, seed_shared),))
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_runner(aggregator: str, normalize: bool, history_dtype,
-                    mesh, spec, data_shared: bool):
+                    mesh, spec, seed_shared: bool):
     """jit(shard_map(vmap(run_engine))) — cached so repeated sweeps with
     the same static config reuse the compiled executable instead of paying
-    a fresh trace + compile per call (jit caches by callable identity)."""
+    a fresh trace + compile per call (jit caches by callable identity; a
+    multi-bucket plan compiles one program per bucket *shape* under the
+    same cached callable)."""
     from jax.experimental.shard_map import shard_map
 
-    inner = _vmap_runner(aggregator, normalize, history_dtype, data_shared)
+    inner = _vmap_runner(aggregator, normalize, history_dtype, seed_shared)
     sharded = shard_map(
         inner, mesh=mesh,
-        in_specs=(_per_field(data_shared, PartitionSpec(), spec),),
+        in_specs=(_per_field(sweep_data_spec(), spec, seed_shared),),
         out_specs=spec)
     return jax.jit(sharded)
 
 
 def execute_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto"
-                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
-                            jnp.ndarray]:
-    """Run a plan's stacked grid as ONE compiled call.
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Run a plan's buckets — one compiled call each — and merge outputs.
 
-    Returns stacked per-point ``(accuracy, loss, grad_norm, sim_clock)``,
-    each ``[P, T_max]``.
+    Returns per-point ``(accuracy, loss, grad_norm, sim_clock)``, each
+    ``[P, T_max]`` with ``T_max = plan.grid_max["t"]``, in original point
+    order.  Rows from a bucket padded to fewer rounds are extended by the
+    engine's own tail convention (accuracy/clock repeat the final value,
+    loss/grad are 0), so bucketing is invisible to every accessor.
 
-    ``placement``: ``"auto"`` shards the point axis over the mesh ``data``
-    axis when ``sweep_spec`` says it divides (falling back to single-device
-    ``vmap`` otherwise — the same autoscaling contract as the weight
-    shardings); ``"vmap"`` forces the single-device path; ``"shard"``
-    requires the sharded path and raises if the mesh cannot take it.
+    ``placement``: ``"auto"`` shards each bucket's point axis over the mesh
+    ``data`` axis when ``sweep_spec`` says it divides (falling back to
+    single-device ``vmap`` per bucket — the same autoscaling contract as
+    the weight shardings); ``"vmap"`` forces the single-device path;
+    ``"shard"`` requires the sharded path for every bucket and raises if
+    the mesh cannot take one.
     """
     if placement not in ("auto", "vmap", "shard"):
         raise ValueError(f"unknown placement {placement!r}")
-    n_points = len(plan.points)
+    if placement != "vmap" and mesh is None:
+        mesh = make_sweep_mesh()
 
-    spec = PartitionSpec()
-    if placement != "vmap":
-        mesh = mesh if mesh is not None else make_sweep_mesh()
-        spec = sweep_spec(n_points, mesh)
-    if spec == PartitionSpec():
-        if placement == "shard":
-            raise ValueError(
-                f"placement='shard' but {n_points} grid points do not "
-                f"divide a >1 mesh axis "
-                f"(mesh={dict(mesh.shape) if mesh is not None else None})")
-        return _vmap_runner(plan.aggregator, plan.normalize,
-                            plan.history_dtype,
-                            plan.data_shared)(plan.inputs)
-    return _sharded_runner(plan.aggregator, plan.normalize,
-                           plan.history_dtype, mesh, spec,
-                           plan.data_shared)(plan.inputs)
+    # resolve every bucket's spec up front so placement='shard' fails fast
+    # (before any bucket compiles/runs) rather than mid-plan
+    specs = [sweep_spec(len(b.point_ids), mesh) if placement != "vmap"
+             else PartitionSpec() for b in plan.buckets]
+    if placement == "shard":
+        for b, spec in zip(plan.buckets, specs):
+            if spec == PartitionSpec():
+                raise ValueError(
+                    f"placement='shard' but a bucket of {len(b.point_ids)} "
+                    f"grid points (of {len(plan.points)} total) does not "
+                    f"divide a >1 mesh axis (mesh="
+                    f"{dict(mesh.shape) if mesh is not None else None}); "
+                    "force max_buckets=1 or use placement='auto'")
+
+    P_, Tg = len(plan.points), plan.grid_max["t"]
+    acc = np.zeros((P_, Tg), np.float32)
+    loss = np.zeros((P_, Tg), np.float32)
+    gn = np.zeros((P_, Tg), np.float32)
+    clock = np.zeros((P_, Tg), np.float32)
+    seed_shared = plan.n_seeds == 1
+    for b, spec in zip(plan.buckets, specs):
+        if spec == PartitionSpec():
+            outs = _vmap_runner(plan.aggregator, plan.normalize,
+                                plan.history_dtype, seed_shared)(b.inputs)
+        else:
+            outs = _sharded_runner(plan.aggregator, plan.normalize,
+                                   plan.history_dtype, mesh, spec,
+                                   seed_shared)(b.inputs)
+        a, l, g, c = (np.asarray(o) for o in outs)
+        ids = np.asarray(b.point_ids)
+        Tb = a.shape[1]
+        acc[ids, :Tb] = a
+        acc[ids, Tb:] = a[:, -1:]
+        loss[ids, :Tb] = l
+        gn[ids, :Tb] = g
+        clock[ids, :Tb] = c
+        clock[ids, Tb:] = c[:, -1:]
+    return acc, loss, gn, clock
+
+
+def run_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto"
+             ) -> SweepResult:
+    """Execute a prepared plan and package a ``SweepResult`` — lets callers
+    inspect/log the bucket plan (``plan.describe()``) before running it."""
+    accs, losses, deltas, clocks = execute_plan(plan, mesh=mesh,
+                                                placement=placement)
+    return SweepResult(
+        points=plan.points,
+        accuracy=accs, loss=losses, grad_norm=deltas, sim_clock=clocks,
+        sim_latency=plan.sim_latency, blocks=plan.blocks,
+        t_valid=plan.t_valid)
 
 
 # ------------------------------------------------------------------ wrapper
@@ -358,26 +593,25 @@ def run_sweep(setting: BHFLSetting, seeds=(0,), *,
               edge_stragglers: str = "temporary",
               normalize: bool = False, history_dtype=None,
               mesh=None, placement: str = "auto",
+              max_buckets: int = 4, bucket_waste: float = 1.25,
               **sim_kw) -> SweepResult:
-    """Grids (including topology/round grids) as ONE compiled sharded call.
+    """Grids (including topology/round grids) as a few compiled sharded
+    calls — one per shape bucket.
 
     ``overrides`` is a list of ``BHFLSetting`` field-override dicts crossed
     with ``seeds``.  Straggler fractions/kinds, gamma/lambda, cold-boot
     length, lr schedule, and seeds vary as pure data; ``n_edges``,
     ``j_per_edge`` (int or per-edge list), ``k_edge_rounds``, and
-    ``t_global_rounds`` vary via padding to the grid max; model/data
-    geometry fields raise a ``ValueError`` naming the field.
+    ``t_global_rounds`` vary via padding to the bucket max (``max_buckets``
+    / ``bucket_waste`` steer the padding-waste heuristic; ``max_buckets=1``
+    restores the single global-max call); model/data geometry fields raise
+    a ``ValueError`` naming the field.  Multi-seed grids keep one dataset
+    copy per *distinct seed* in device memory, not per point.
     """
     plan = plan_sweep(setting, seeds, overrides=overrides,
                       aggregator=aggregator,
                       device_stragglers=device_stragglers,
                       edge_stragglers=edge_stragglers, normalize=normalize,
-                      history_dtype=history_dtype, **sim_kw)
-    accs, losses, deltas, clocks = execute_plan(plan, mesh=mesh,
-                                                placement=placement)
-    return SweepResult(
-        points=plan.points,
-        accuracy=np.asarray(accs), loss=np.asarray(losses),
-        grad_norm=np.asarray(deltas), sim_clock=np.asarray(clocks),
-        sim_latency=plan.sim_latency, blocks=plan.blocks,
-        t_valid=plan.t_valid)
+                      history_dtype=history_dtype, max_buckets=max_buckets,
+                      bucket_waste=bucket_waste, **sim_kw)
+    return run_plan(plan, mesh=mesh, placement=placement)

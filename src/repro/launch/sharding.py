@@ -70,11 +70,17 @@ SERVE_RULES = {
 # sweep fabric: the stacked grid-point axis of a batched BHFL sweep
 # (repro.fl.sweep).  Prefers the full pod×data product when pods exist,
 # otherwise the data axis; the usual divisibility contract applies, so an
-# indivisible or single-device grid degrades to the vmap path instead of
-# failing to lower.  Every stacked EngineInputs plane rides this one axis
-# — including the latency fabric's per-round ``dev_time``/``cons_time``
-# draws (PR 3), so a consensus-latency×topology grid shards its time
-# accounting alongside its training data with no extra rules.
+# indivisible or single-device bucket degrades to the vmap path instead of
+# failing to lower (per shape bucket — each bucket of a plan resolves its
+# own spec from its own point count).  Every stacked EngineInputs plane
+# rides this one axis — including the latency fabric's per-round
+# ``dev_time``/``cons_time`` draws (PR 3), so a consensus-latency×topology
+# grid shards its time accounting alongside its training data with no
+# extra rules.  The one exception is the seed-major data plane
+# (``sweep.SHARED_DATA_FIELDS``): train/test/init arrays carry a
+# ``[n_seeds]`` seed axis instead of the point axis and are replicated on
+# every device (``sweep_data_spec``) — device-resident data scales with
+# distinct seeds, not grid points.
 SWEEP_RULES = {
     "sweep_points": (("pod", "data"), ("data",)),
 }
@@ -98,6 +104,19 @@ def sweep_spec(n_points: int, mesh: Mesh) -> P:
     ``vmap`` exactly as ``resolve_spec`` degrades undersized kv heads.
     """
     return resolve_spec((n_points,), ("sweep_points",), SWEEP_RULES, mesh)
+
+
+def sweep_data_spec() -> P:
+    """PartitionSpec for the sweep fabric's seed-major data plane.
+
+    The train/test/init arrays of a sweep are stacked over *distinct
+    seeds* (``[n_seeds, ...]``), not grid points, and every point gathers
+    its row by ``seed_idx`` inside the engine — so the plane is replicated
+    across the mesh (``P()``) rather than sharded with the point axis.
+    Kept as a named helper (not a bare ``P()`` at the call site) so the
+    data-plane placement contract has exactly one home.
+    """
+    return P()
 
 
 # ------------------------------------------------------------- resolution

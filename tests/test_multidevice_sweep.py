@@ -35,8 +35,12 @@ _CHILD = textwrap.dedent("""
     ovs = [{"n_edges": 2}, {"j_per_edge": 2}, {"k_edge_rounds": 1},
            {"straggler_frac": 0.4}]
 
-    a = run_sweep(TINY, overrides=ovs, placement="vmap", **KW)
-    b = run_sweep(TINY, overrides=ovs, placement="shard", **KW)
+    # forcing shard on a mixed-shape grid needs the single global-max
+    # bucket: auto-bucketed sub-grids of 1-2 points cannot divide 4 devices
+    a = run_sweep(TINY, overrides=ovs, placement="vmap", max_buckets=1,
+                  **KW)
+    b = run_sweep(TINY, overrides=ovs, placement="shard", max_buckets=1,
+                  **KW)
     np.testing.assert_allclose(b.accuracy, a.accuracy, atol=1e-6)
     np.testing.assert_allclose(b.loss, a.loss, rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(b.grad_norm, a.grad_norm, rtol=1e-4,
@@ -49,6 +53,20 @@ _CHILD = textwrap.dedent("""
 
     auto = run_sweep(TINY, overrides=ovs, placement="auto", **KW)
     np.testing.assert_allclose(auto.accuracy, b.accuracy, atol=1e-6)
+
+    # seed-deduped data plane under real shard_map: 4 points over 2
+    # distinct seeds shard across the 4 devices while the [2, ...] data
+    # plane stays replicated and every shard gathers its row by seed_idx
+    seeded_v = run_sweep(TINY, seeds=(0, 1),
+                         overrides=[{}, {"straggler_frac": 0.4}],
+                         placement="vmap", **KW)
+    seeded_s = run_sweep(TINY, seeds=(0, 1),
+                         overrides=[{}, {"straggler_frac": 0.4}],
+                         placement="shard", **KW)
+    np.testing.assert_allclose(seeded_s.accuracy, seeded_v.accuracy,
+                               atol=1e-6)
+    np.testing.assert_allclose(seeded_s.sim_clock, seeded_v.sim_clock,
+                               rtol=1e-5)
     print("MULTIDEVICE_SWEEP_OK")
 """)
 

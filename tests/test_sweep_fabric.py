@@ -1,11 +1,17 @@
-"""The sweep fabric: shape-polymorphic planner + mesh placement.
+"""The sweep fabric: shape-bucketed planner + mesh placement.
 
 Every point of a padded grid — including grids over topology (N edges,
 J devices per edge) and round counts (K, T), which change engine array
 shapes per point — must reproduce a standalone ``BHFLSimulator.run`` of
 the same setting, and padded extents must never contribute to any
-aggregate.  The multi-device ``shard_map`` path is pinned against ``vmap``
-in ``test_multidevice_sweep.py`` (forced-host-device subprocess).
+aggregate.  Bucketing (grouping points into a few shape buckets instead
+of padding everything to the single grid max) and the seed-deduped data
+plane (one ``[n_seeds]`` dataset stack gathered by ``seed_idx`` inside
+the engine) must both be invisible to numerics: the bucketed/deduped
+grid is pinned per point against the single-bucket reference AND against
+standalone runs that materialize their own data.  The multi-device
+``shard_map`` path is pinned against ``vmap`` in
+``test_multidevice_sweep.py`` (forced-host-device subprocess).
 """
 import dataclasses
 
@@ -17,7 +23,8 @@ from _hypothesis_compat import given, settings, st
 
 from repro.configs.bhfl_cnn import REDUCED
 from repro.core import straggler
-from repro.fl import BHFLSimulator, build_inputs, plan_sweep, run_sweep
+from repro.fl import (BHFLSimulator, build_inputs, plan_sweep, run_plan,
+                      run_sweep)
 from repro.fl.engine import run_engine
 
 TINY = dataclasses.replace(REDUCED, t_global_rounds=3, n_edges=3,
@@ -232,26 +239,128 @@ def test_history_dtype_threads_through_sweep():
 def test_plan_exposes_grid_maxima_and_stacked_inputs():
     plan = plan_sweep(TINY, overrides=[{"n_edges": 2, "k_edge_rounds": 2},
                                        {"n_edges": 4, "j_per_edge": 2}],
-                      **KW)
+                      max_buckets=1, **KW)
     assert plan.grid_max["n"] == 4 and plan.grid_max["j"] == 3
     assert plan.grid_max["k"] == TINY.k_edge_rounds
+    # max_buckets=1: the PR 2 single global-max stack; plan.inputs is the
+    # single-bucket convenience accessor
+    assert len(plan.buckets) == 1
     assert plan.inputs.dev_masks.shape == (
         2, plan.grid_max["t"], plan.grid_max["k"], plan.grid_max["n"],
         plan.grid_max["j"])
 
 
-def test_plan_shares_dataset_across_same_seed_points():
-    """Same-seed grids keep ONE copy of the train/test/init arrays (they
-    are a pure function of seed + grid-constant geometry); multi-seed
-    grids stack per-point copies."""
+def test_plan_dedups_dataset_by_distinct_seed():
+    """The data plane is seed-major: one ``[n_seeds]`` stack of the
+    train/test/init arrays (they are a pure function of seed +
+    grid-constant geometry) shared by every bucket, with per-point
+    ``seed_idx`` gather indices — NEVER one dataset copy per point."""
     one = plan_sweep(TINY, overrides=[{"straggler_frac": 0.2},
                                       {"straggler_frac": 0.4}], **KW)
-    assert one.data_shared
-    assert one.inputs.train_x.shape[0] != 2          # no point axis
-    assert one.inputs.train_x.shape == (KW["n_train"],
+    assert one.n_seeds == 1
+    assert one.inputs.train_x.shape == (1, KW["n_train"],
                                         TINY.image_hw, TINY.image_hw, 1)
-    assert one.inputs.batch_idx.shape[0] == 2        # data plane stacked
+    assert one.inputs.batch_idx.shape[0] == 2        # point plane stacked
+    # single-seed plan: seed_idx stays a shared scalar (unmapped under
+    # vmap, so the engine's test/init gathers stay unbatched)
+    assert np.asarray(one.inputs.seed_idx).shape == ()
+    assert int(one.inputs.seed_idx) == 0
 
-    multi = plan_sweep(TINY, seeds=(0, 1), **KW)
-    assert not multi.data_shared
+    multi = plan_sweep(TINY, seeds=(0, 1), overrides=[{}, {"gamma0": 0.5}],
+                       **KW)
+    assert multi.n_seeds == 2
+    # 4 points, but only 2 dataset rows — memory scales with seeds
+    assert len(multi.points) == 4
     assert multi.inputs.train_x.shape[0] == 2
+    np.testing.assert_array_equal(np.asarray(multi.inputs.seed_idx),
+                                  [0, 1, 0, 1])
+
+
+def test_bucketing_bounds_programs_and_cuts_padding():
+    """The padding-waste heuristic: at most ``max_buckets`` buckets, every
+    point in exactly one bucket, and strictly less padded compute than the
+    single global-max bucket on a mixed-shape grid."""
+    ovs = [{"n_edges": 2}, {"n_edges": 4}, {"j_per_edge": 2},
+           {"k_edge_rounds": 1}, {"t_global_rounds": 2}, {}]
+    auto = plan_sweep(TINY, overrides=ovs, max_buckets=3, bucket_waste=1.0,
+                      **KW)
+    single = plan_sweep(TINY, overrides=ovs, max_buckets=1, **KW)
+    assert len(single.buckets) == 1
+    assert 1 < len(auto.buckets) <= 3
+    assert sorted(i for b in auto.buckets for i in b.point_ids) \
+        == list(range(len(ovs)))
+    sa, ss = auto.padding_stats(), single.padding_stats()
+    assert sa["ideal_volume"] == ss["ideal_volume"]
+    assert sa["padded_volume"] < ss["padded_volume"]
+    assert 0.0 <= sa["padded_flop_frac"] < sa["single_bucket_flop_frac"]
+    # per-bucket inputs are padded to the bucket max, not the global max
+    assert any(b.inputs.dev_masks.shape[1:] != (
+        single.grid_max["t"], single.grid_max["k"], single.grid_max["n"],
+        single.grid_max["j"]) for b in auto.buckets)
+    assert "bucket" in auto.describe()
+    with pytest.raises(ValueError, match="buckets"):
+        auto.inputs          # multi-bucket plan: no single stacked inputs
+    with pytest.raises(ValueError, match="max_buckets"):
+        plan_sweep(TINY, overrides=ovs, max_buckets=0, **KW)
+
+
+def test_identical_shapes_always_share_a_bucket():
+    """Shape-preserving grids (fig7-style data-only sweeps) stay ONE
+    compiled call no matter the bucketing knobs."""
+    plan = plan_sweep(TINY, overrides=[{"straggler_frac": f}
+                                       for f in (0.0, 0.2, 0.4)],
+                      max_buckets=4, bucket_waste=1.0, **KW)
+    assert len(plan.buckets) == 1
+    assert plan.padding_stats()["padded_flop_frac"] == 0.0
+
+
+# ------------------------------------------------- bucketed execution parity
+def test_bucketed_grid_matches_single_bucket_and_standalone():
+    """The acceptance criterion: a fig3-style mixed J/N/K grid run through
+    ≤3 bucketed programs matches the single-bucket reference per point
+    (trajectories and sim_clock) AND standalone runs."""
+    ovs = [{"n_edges": 2}, {"n_edges": 4}, {"j_per_edge": 2},
+           {"k_edge_rounds": 1}, {"t_global_rounds": 2}, {}]
+    bucketed = run_sweep(TINY, overrides=ovs, max_buckets=3,
+                         bucket_waste=1.0, **KW)
+    single = run_sweep(TINY, overrides=ovs, max_buckets=1, **KW)
+    assert bucketed.accuracy.shape == single.accuracy.shape
+    np.testing.assert_allclose(bucketed.accuracy, single.accuracy,
+                               atol=1e-6)
+    np.testing.assert_allclose(bucketed.loss, single.loss, rtol=1e-5,
+                               atol=1e-6)
+    np.testing.assert_allclose(bucketed.grad_norm, single.grad_norm,
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(bucketed.sim_clock, single.sim_clock,
+                               rtol=1e-5)
+    for p, (ov, seed) in enumerate(bucketed.points):
+        _check_point(bucketed, p, _standalone(ov, seed))
+
+
+def test_seed_dedup_gather_matches_per_point_materialized_data():
+    """A ≥3-seed grid pulls every point's dataset through the in-engine
+    ``seed_idx`` gather of the shared ``[n_seeds]`` plane; standalone runs
+    materialize their own data — the two must agree exactly."""
+    sw = run_sweep(TINY, seeds=(0, 1, 2),
+                   overrides=[{}, {"straggler_frac": 0.4}], **KW)
+    assert len(sw.points) == 6
+    for p, (ov, seed) in enumerate(sw.points):
+        _check_point(sw, p, _standalone(ov, seed))
+    # distinct seeds genuinely produce distinct data/trajectories
+    assert not np.array_equal(sw.accuracy[0], sw.accuracy[1])
+
+
+def test_seed_dedup_composes_with_bucketing():
+    """Multi-seed x mixed-shape: buckets may split seed groups arbitrarily;
+    every bucket still gathers from the one shared data plane."""
+    plan = plan_sweep(TINY, seeds=(0, 1),
+                      overrides=[{}, {"n_edges": 2, "k_edge_rounds": 1}],
+                      max_buckets=2, bucket_waste=1.0, **KW)
+    assert plan.n_seeds == 2 and len(plan.buckets) == 2
+    for b in plan.buckets:
+        assert b.inputs.train_x.shape[0] == 2        # full plane everywhere
+        # same device buffers in every bucket, not copies
+        assert b.inputs.train_x is plan.buckets[0].inputs.train_x
+    sw = run_plan(plan)
+    for p, (ov, seed) in enumerate(sw.points):
+        _check_point(sw, p, _standalone(ov, seed))
