@@ -35,7 +35,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of " + ",".join(SUITES))
     ap.add_argument("--emit-json", action="store_true",
-                    help="write BENCH_*.json (engine/sweep suites)")
+                    help="write BENCH_*.json (engine/sweep/latency/kernels)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
     suites = dict(SUITES)
@@ -44,6 +44,8 @@ def main() -> None:
     suites["sweep"] = functools.partial(bench_sweep.main,
                                         emit_json=args.emit_json)
     suites["latency"] = functools.partial(bench_latency.main,
+                                          emit_json=args.emit_json)
+    suites["kernels"] = functools.partial(kernel_bench.main,
                                           emit_json=args.emit_json)
     t0 = time.time()
     for name in names:

@@ -26,7 +26,15 @@ compiles an ENTIRE run into one program:
     ``seed_idx`` — under the sweep fabric the data plane is shared across
     all grid points (vmap ``in_axes=None`` / ``shard_map`` replicated), so
     a multi-seed confidence grid holds the *distinct-seed* count in device
-    memory, not one dataset copy per point.
+    memory, not one dataset copy per point,
+  * the hot path (warm HieAvg aggregation at both hierarchy layers, the
+    train-step SGD update) routes through the *kernel plane*
+    (``repro.kernels.dispatch``): a static ``kernel_mode`` knob selects
+    the fused Pallas kernels on TPU/GPU, the pure-XLA reference on CPU
+    ("auto"), or the Pallas interpreter for validation — and the
+    donating entries (``run_engine_donated``; ``split_inputs`` /
+    ``SHARED_DATA_FIELDS``) hand the per-run input planes to the
+    compiled call so callers stop holding a second copy.
 
 The padding/validity-mask contract and the seed-dedup invariants are
 documented in docs/ARCHITECTURE.md (§Engine); tests/test_sweep_fabric.py
@@ -43,6 +51,7 @@ Parity with ``BHFLSimulator.run_legacy`` is tested in
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Optional
 
@@ -53,6 +62,7 @@ import numpy as np
 from repro.core import baselines, hieavg
 from repro.core import latency as lat
 from repro.core import straggler as strag
+from repro.kernels import dispatch as kernel_dispatch
 from repro.models import (cnn_accuracy_fast, cnn_loss, cnn_loss_fast,
                           init_from_specs)
 from repro.optim import paper_lr
@@ -64,8 +74,8 @@ PyTree = Any
 def train_epoch_body(params: PyTree, images: jnp.ndarray,
                      labels: jnp.ndarray, lr: jnp.ndarray,
                      loss_fn=cnn_loss_fast,
-                     step_ok: Optional[jnp.ndarray] = None
-                     ) -> tuple[PyTree, jnp.ndarray]:
+                     step_ok: Optional[jnp.ndarray] = None,
+                     kernel_mode: str = "xla") -> tuple[PyTree, jnp.ndarray]:
     """One local epoch for all devices.  params: stacked [D, ...];
     images: [D, steps, B, H, W, 1]; labels: [D, steps, B]. Returns
     (new stacked params, mean loss per device [D]).
@@ -80,6 +90,12 @@ def train_epoch_body(params: PyTree, images: jnp.ndarray,
     padded step (0) applies no update and is excluded from the mean loss;
     a real step multiplies lr by 1.0, which is exact in f32, so a fully
     valid mask is bitwise identical to passing ``None``.
+
+    ``kernel_mode`` (resolved — ``"pallas"``/``"interpret"``/``"xla"``):
+    routes the inner SGD update through ``kernels.dispatch.sgd_update`` —
+    the fused one-pass kernel on accelerators, the original ``tree.map``
+    on the XLA path.  The padded-step mask folds into the kernel's scale
+    (0 → exact identity) so padding stays a numeric no-op on every path.
     """
 
     def step(ps, xs):
@@ -90,7 +106,7 @@ def train_epoch_body(params: PyTree, images: jnp.ndarray,
             im, lb, ok = xs
             scale = lr * ok
         loss, g = jax.vmap(jax.value_and_grad(loss_fn))(ps, im, lb)
-        ps = jax.tree.map(lambda w, gw: w - scale * gw, ps, g)
+        ps = kernel_dispatch.sgd_update(ps, g, scale, mode=kernel_mode)
         return ps, loss
 
     images = jnp.swapaxes(images, 0, 1)                 # [steps, D, ...]
@@ -125,7 +141,7 @@ class EngineInputs:
     (``valid``/``j_arr``), padded edge rounds and global rounds carry the
     scan state through unchanged, padded SGD steps apply no update.
 
-    Data-plane fields (train/test/init, ``sweep.SHARED_DATA_FIELDS``) are
+    Data-plane fields (train/test/init, ``engine.SHARED_DATA_FIELDS``) are
     *seed-major*: a leading ``[S]`` axis of distinct seeds, gathered per
     run by the scalar ``seed_idx``.  The sweep fabric never stacks them
     along the point axis — they are shared (replicated) across the whole
@@ -163,6 +179,47 @@ class EngineInputs:
     cons_time: jnp.ndarray    # [T] f32 — per-round consensus latency L_bc
     #   (replayed RaftChain election + commit, scaled by consensus_mult)
     edge_hop: jnp.ndarray     # scalar f32 — 2 * E[LM'] edge<->leader hop
+
+
+#: ``EngineInputs`` fields that form the seed-major data plane: a pure
+#: function of (seed, grid-constant geometry), carried with a leading
+#: ``[S]`` distinct-seed axis and shared — never stacked per point — by
+#: the sweep fabric (vmap ``in_axes=None`` / shard_map replicated), and
+#: never *donated*: every bucket of a plan (and every same-seed point via
+#: ``share_data_from``) aliases the same device buffers, so handing them
+#: to XLA for reuse would invalidate the other aliases.
+SHARED_DATA_FIELDS = frozenset({"train_x", "train_y", "test_x", "test_y",
+                                "init_w"})
+
+
+def split_inputs(inp: EngineInputs, *, shared_seed_idx: bool = False
+                 ) -> tuple[dict, dict]:
+    """Split an ``EngineInputs`` into ``(hot, shared)`` field dicts.
+
+    ``hot`` holds the per-run (sweep: per-point stacked) planes — safe to
+    donate to the compiled run, so a big bucketed grid does not hold two
+    copies of the stacked state (caller buffers + device working set)
+    while it executes.  ``shared`` holds the seed-major data plane, which
+    is aliased across buckets/points and therefore never donated (and
+    never mapped/sharded — see ``launch.sharding.sweep_data_spec``).
+
+    ``shared_seed_idx``: on single-seed sweep plans ``seed_idx`` is a
+    plan-wide scalar 0 and rides the shared side (keeping the engine's
+    test/init gathers unbatched under vmap); multi-seed plans stack it
+    per point, so it belongs to the hot side like every stacked field.
+    """
+    hot, shared = {}, {}
+    for f in dataclasses.fields(EngineInputs):
+        side = shared if (f.name in SHARED_DATA_FIELDS
+                          or (f.name == "seed_idx" and shared_seed_idx)) \
+            else hot
+        side[f.name] = getattr(inp, f.name)
+    return hot, shared
+
+
+def merge_inputs(hot: dict, shared: dict) -> EngineInputs:
+    """Inverse of ``split_inputs`` (used inside the jitted runners)."""
+    return EngineInputs(**hot, **shared)
 
 
 def replay_chain(sim) -> np.ndarray:
@@ -224,7 +281,7 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
     buffers instead of converting this sim's own — the sweep planner's
     same-seed dedup (the caller guarantees the seed and data geometry
     match, which makes those arrays byte-identical; see
-    ``sweep.SHARED_DATA_FIELDS``).  The emitted data plane always carries
+    ``engine.SHARED_DATA_FIELDS``).  The emitted data plane always carries
     the seed-major ``[S=1]`` leading axis with ``seed_idx=0``; the planner
     concatenates distinct-seed planes and rewrites ``seed_idx`` per point
     when it stacks a grid.
@@ -329,11 +386,11 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
 
 
 # ------------------------------------------------------------- jitted run
-@partial(jax.jit, static_argnames=("aggregator", "normalize",
-                                   "history_dtype"))
-def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
-               normalize: bool = False, history_dtype=None
-               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
+                 normalize: bool = False, history_dtype=None,
+                 kernel_mode: str = "auto"
+                 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                            jnp.ndarray]:
     """One whole BHFL run as a single compiled program.
 
     Returns per-global-round (accuracy [T], mean local loss [T],
@@ -370,7 +427,17 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
     ``history_dtype`` overrides HieAvg's history storage dtype end-to-end
     (EXPERIMENTS.md X1): bf16 cuts the two-model-copies-per-layer memory
     cost 2× for free, f8 4× at an accuracy cost; estimation math stays f32.
+
+    ``kernel_mode`` routes the hot path — the warm HieAvg edge/global
+    aggregations and the train-step SGD update — through the kernel plane
+    (``repro.kernels.dispatch``): ``"auto"`` resolves to the fused Pallas
+    kernels on TPU/GPU and the pure-XLA reference on CPU (zero overhead);
+    ``"interpret"`` forces the Pallas interpreter (the CPU validation
+    path the parity tests pin); ``"xla"`` forces the reference.  The cold
+    -boot rounds and the non-HieAvg baseline aggregators always use XLA
+    (a handful of cheap rounds / simple means — not the hot path).
     """
+    kernel_mode = kernel_dispatch.resolve_kernel_mode(kernel_mode)
     T, K, N, J = inp.dev_masks.shape
     steps, bs = inp.batch_idx.shape[-2:]
     D = N * J
@@ -416,7 +483,8 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
                           inp.train_y[inp.seed_idx, bidx], 0)
             pflat, loss = train_epoch_body(
                 flat(device_w), x.reshape((D, steps, bs) + x.shape[4:]),
-                y.reshape(D, steps, bs), lr, step_ok=step_ok)
+                y.reshape(D, steps, bs), lr, step_ok=step_ok,
+                kernel_mode=kernel_mode)
             ws = unflat(pflat)
             dev_loss = loss.reshape(N, J)
 
@@ -431,8 +499,9 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
                             hieavg.update_history_batched(h, w, m))
 
                 def warm(w, m, h):
-                    return hieavg.edge_aggregate_batched(
-                        w, m, h, inp.valid, inp.gamma0, inp.lam, normalize)
+                    return kernel_dispatch.edge_aggregate_batched(
+                        w, m, h, inp.valid, inp.gamma0, inp.lam, normalize,
+                        mode=kernel_mode)
 
                 edge_models, ehist = jax.lax.cond(
                     t <= inp.t_cold_boot, cold, warm, ws, dmask, ehist)
@@ -476,8 +545,9 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
                         hieavg.update_history(h, w, m))
 
             def warmg(w, m, h):
-                return hieavg.aggregate(w, m, h, pw, inp.gamma0, inp.lam,
-                                        normalize)
+                return kernel_dispatch.global_aggregate(
+                    w, m, h, pw, inp.gamma0, inp.lam, normalize,
+                    mode=kernel_mode)
 
             global_w, ghist = jax.lax.cond(
                 t <= inp.t_cold_boot, coldg, warmg, edge_models, emask, ghist)
@@ -550,6 +620,63 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
         lambda w: cnn_accuracy_fast(w, test_x, test_y),
         globals_per_round)
     return accs, losses, deltas, clocks
+
+
+@partial(jax.jit, static_argnames=("aggregator", "normalize",
+                                   "history_dtype", "kernel_mode"))
+def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
+               normalize: bool = False, history_dtype=None,
+               kernel_mode: str = "auto"
+               ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                          jnp.ndarray]:
+    """The standard jitted entry — see ``_engine_body`` for the contract.
+
+    Input buffers are left intact (callers may reuse ``inp``); the
+    donating twin is ``run_engine_donated``.
+    """
+    return _engine_body(inp, aggregator=aggregator, normalize=normalize,
+                        history_dtype=history_dtype, kernel_mode=kernel_mode)
+
+
+@partial(jax.jit, static_argnames=("aggregator", "normalize",
+                                   "history_dtype", "kernel_mode"),
+         donate_argnums=(0,))
+def _run_engine_donated(hot: dict, shared: dict, *,
+                        aggregator: str, normalize: bool, history_dtype,
+                        kernel_mode: str):
+    return _engine_body(merge_inputs(hot, shared), aggregator=aggregator,
+                        normalize=normalize, history_dtype=history_dtype,
+                        kernel_mode=kernel_mode)
+
+
+def run_engine_donated(inp: EngineInputs, *, aggregator: str = "hieavg",
+                       normalize: bool = False, history_dtype=None,
+                       kernel_mode: str = "auto"
+                       ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                                  jnp.ndarray]:
+    """``run_engine`` with the hot input planes DONATED to the program.
+
+    Every ``EngineInputs`` field except the seed-major data plane
+    (``SHARED_DATA_FIELDS`` — aliased across callers, never donated) is
+    handed to XLA for buffer reuse, so the run does not hold the caller's
+    copy of the batch-index/mask/latency planes alive next to its own
+    working set.  ``inp``'s hot leaves are DELETED afterwards — callers
+    must treat the inputs as consumed (``BHFLSimulator.run`` rebuilds
+    them per call; the sweep runners donate per bucket the same way).
+    Numerics are identical to ``run_engine`` (same traced body).
+    """
+    hot, shared = split_inputs(inp)
+    with warnings.catch_warnings():
+        # expected: the engine's outputs are tiny [T] rows, so XLA rarely
+        # finds an input-output alias for the big donated planes — the
+        # donation is still correct (and pays off where aliasing applies);
+        # the caller-side release of the consumed inputs is the real win
+        warnings.filterwarnings(
+            "ignore", message="Some donated buffers were not usable")
+        return _run_engine_donated(hot, shared, aggregator=aggregator,
+                                   normalize=normalize,
+                                   history_dtype=history_dtype,
+                                   kernel_mode=kernel_mode)
 
 
 # ----------------------------------------------------------------- sweeps

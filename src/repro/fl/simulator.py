@@ -38,6 +38,7 @@ import numpy as np
 from repro.configs.bhfl_cnn import BHFLSetting
 from repro.core import (RaftChain, RaftParams, baselines, hieavg,
                         latency as lat, straggler as strag)
+from repro.kernels import dispatch as _kdispatch
 from repro.data import by_class, class_images
 from repro.models import cnn_accuracy, cnn_specs, init_from_specs
 from repro.optim import paper_lr
@@ -92,7 +93,8 @@ class BHFLSimulator:
                  normalize: bool = False,
                  fail_leader_at: Optional[int] = None,
                  seed: Optional[int] = None,
-                 history_dtype=None):
+                 history_dtype=None,
+                 kernel_mode: str = "auto"):
         """``fail_leader_at``: global round at which the current Raft
         leader crashes — the paper's single-point-of-failure scenario.
         The consortium re-elects and training continues (the failed edge
@@ -102,11 +104,20 @@ class BHFLSimulator:
         path only) — straggler estimation keeps two extra model copies
         per participant per layer; ``jnp.bfloat16`` cuts that 2× at no
         measured accuracy cost, ``jnp.float8_e4m3fn`` 4× with an accuracy
-        penalty.  The estimation math stays f32.  See EXPERIMENTS.md X1."""
+        penalty.  The estimation math stays f32.  See EXPERIMENTS.md X1.
+
+        ``kernel_mode``: the kernel-plane backend knob (engine path only,
+        like ``history_dtype``) — ``"auto"`` runs the fused Pallas
+        aggregation/SGD kernels on TPU/GPU and the pure-XLA reference on
+        CPU; ``"interpret"``/``"pallas"``/``"xla"`` force a path.  See
+        ``repro.kernels.dispatch``."""
         self.s = setting
         self.aggregator = aggregator
         self.normalize = normalize
         self.history_dtype = history_dtype
+        # resolve once: validates the knob early and keys the engine's jit
+        # cache on the concrete mode instead of "auto"
+        self.kernel_mode = _kdispatch.resolve_kernel_mode(kernel_mode)
         self.fail_leader_at = fail_leader_at
         self.seed = setting.seed if seed is None else seed
         self.N = setting.n_edges
@@ -205,9 +216,12 @@ class BHFLSimulator:
         """
         t0 = time.time()
         inp = _engine.build_inputs(self)
-        accs, losses, deltas, clock = _engine.run_engine(
+        # donated entry: the freshly built hot input planes are handed to
+        # the compiled run for buffer reuse (they are rebuilt per call, so
+        # nothing else holds them)
+        accs, losses, deltas, clock = _engine.run_engine_donated(
             inp, aggregator=self.aggregator, normalize=self.normalize,
-            history_dtype=self.history_dtype)
+            history_dtype=self.history_dtype, kernel_mode=self.kernel_mode)
         accs, losses, deltas, clock = (np.asarray(accs), np.asarray(losses),
                                        np.asarray(deltas), np.asarray(clock))
         if progress:

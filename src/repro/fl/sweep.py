@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -68,7 +69,9 @@ import numpy as np
 from jax.sharding import PartitionSpec
 
 from repro.configs.bhfl_cnn import BHFLSetting
-from repro.fl.engine import EngineInputs, build_inputs, run_engine
+from repro.fl.engine import (SHARED_DATA_FIELDS, EngineInputs, build_inputs,
+                             merge_inputs, run_engine, split_inputs)
+from repro.kernels.dispatch import resolve_kernel_mode
 from repro.launch.mesh import make_sweep_mesh
 from repro.launch.sharding import sweep_data_spec, sweep_spec
 
@@ -118,13 +121,11 @@ def _validate_overrides(overrides: list[dict]) -> None:
 
 
 # ------------------------------------------------------------ shape buckets
-#: ``EngineInputs`` fields that depend only on the seed and the
-#: (grid-constant) data/model geometry.  They form the seed-major data
-#: plane: ONE ``[n_seeds, ...]`` stack shared by every bucket (vmap
-#: ``in_axes=None`` / shard_map replicated), gathered per point by
-#: ``seed_idx`` inside the engine — never stacked along the point axis.
-SHARED_DATA_FIELDS = frozenset({"train_x", "train_y", "test_x", "test_y",
-                                "init_w"})
+# The seed-major data plane (``SHARED_DATA_FIELDS``, defined next to
+# ``EngineInputs`` in ``repro.fl.engine`` and re-exported here): ONE
+# ``[n_seeds, ...]`` stack shared by every bucket (vmap ``in_axes=None`` /
+# shard_map replicated, never donated), gathered per point by ``seed_idx``
+# inside the engine — never stacked along the point axis.
 
 _SHAPE_KEYS = ("t", "k", "n", "j", "steps")
 
@@ -186,24 +187,6 @@ def _bucket_points(extents: list[dict], max_buckets: int,
     return buckets
 
 
-def _per_field(on_shared, on_stacked, seed_shared: bool) -> EngineInputs:
-    """EngineInputs-shaped pytree prefix: one marker per field (used for
-    ``vmap`` in_axes and ``shard_map`` in_specs).  Data-plane fields are
-    always shared; ``seed_idx`` is shared too on single-seed plans
-    (``seed_shared`` — keeping it unmapped keeps the engine's test/init
-    gathers unbatched, so vmap never materializes P identical test-set
-    copies); everything else rides the stacked point axis."""
-    def mark(name):
-        if name in SHARED_DATA_FIELDS:
-            return on_shared
-        if name == "seed_idx" and seed_shared:
-            return on_shared
-        return on_stacked
-
-    return EngineInputs(**{f.name: mark(f.name)
-                           for f in dataclasses.fields(EngineInputs)})
-
-
 def _stack_points(inputs: list[EngineInputs], data_plane: dict,
                   seed_ids: list[int], seed_shared: bool) -> EngineInputs:
     """Stack one bucket's per-point inputs along a leading point axis.
@@ -211,7 +194,9 @@ def _stack_points(inputs: list[EngineInputs], data_plane: dict,
     Data-plane fields take the plan-wide seed-major stack (same device
     buffers in every bucket); ``seed_idx`` becomes the per-point ``[Pb]``
     gather index (or stays the scalar 0 on single-seed plans, matching
-    ``_per_field``'s shared marker); everything else stacks point-major.
+    ``split_inputs``' ``shared_seed_idx`` side — keeping it unmapped keeps
+    the engine's test/init gathers unbatched, so vmap never materializes
+    P identical test-set copies); everything else stacks point-major.
     """
     def one(name):
         if name == "seed_idx":
@@ -230,7 +215,10 @@ def _stack_points(inputs: list[EngineInputs], data_plane: dict,
 class SweepBucket:
     """One shape bucket: a compiled-call-ready stack of compatible points."""
     point_ids: list            # indices into the plan's point order
-    inputs: EngineInputs       # stacked [Pb, ...], padded to bucket maxima
+    inputs: Optional[EngineInputs]  # stacked [Pb, ...], padded to bucket
+    #   maxima.  None after a donated execute consumed this bucket (the
+    #   donation contract: the stacked planes are handed to the compiled
+    #   call and the plan stops pinning them).
     grid_max: dict             # this bucket's {"t","k","n","j","steps"}
 
 
@@ -250,6 +238,9 @@ class SweepPlan:
     aggregator: str
     normalize: bool
     history_dtype: Any
+    kernel_mode: str                # resolved kernel-plane backend (never
+    #   "auto": plan_sweep resolves so runner caches key on the concrete
+    #   mode — see repro.kernels.dispatch)
     n_seeds: int                    # distinct seeds in the data plane
     sim_latency: np.ndarray         # [P] paper latency model totals
     blocks: np.ndarray              # [P] committed blocks per point
@@ -264,6 +255,11 @@ class SweepPlan:
             raise ValueError(
                 f"plan has {len(self.buckets)} shape buckets; per-bucket "
                 "inputs live at plan.buckets[i].inputs")
+        if self.buckets[0].inputs is None:
+            raise ValueError(
+                "this SweepPlan's bucket inputs were consumed by a donated "
+                "execute_plan/run_plan; build a fresh plan, or run with "
+                "donate=False to keep a plan re-runnable")
         return self.buckets[0].inputs
 
     def padding_stats(self) -> dict:
@@ -371,6 +367,7 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
                device_stragglers: str = "temporary",
                edge_stragglers: str = "temporary",
                normalize: bool = False, history_dtype=None,
+               kernel_mode: str = "auto",
                max_buckets: int = 4, bucket_waste: float = 1.25,
                **sim_kw) -> SweepPlan:
     """Precompute a grid (overrides x seeds) into bucketed ``EngineInputs``.
@@ -387,9 +384,15 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
 
     Datasets/init weights are seed-deduped: one ``[n_seeds]`` stack shared
     by every bucket, with per-point ``seed_idx`` gathers inside the engine.
+
+    ``kernel_mode`` is the kernel-plane backend knob (like
+    ``history_dtype``): resolved here (``"auto"`` → fused Pallas kernels
+    on TPU/GPU, pure-XLA reference on CPU) and baked into the plan so the
+    cached runners key on the concrete mode.
     """
     from repro.fl.simulator import BHFLSimulator  # lazy: avoid import cycle
 
+    kernel_mode = resolve_kernel_mode(kernel_mode)   # validate up front
     overrides = [dict(ov) for ov in (overrides or [{}])]
     _validate_overrides(overrides)
     # an override's explicit "seed" wins over the ``seeds`` cross product
@@ -471,6 +474,7 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
     return SweepPlan(points=points, buckets=buckets, grid_max=grid_max,
                      aggregator=aggregator, normalize=normalize,
                      history_dtype=history_dtype,
+                     kernel_mode=kernel_mode,
                      n_seeds=len(seed_to_idx),
                      sim_latency=np.asarray([s.paper_latency()
                                              for s in sims]),
@@ -482,35 +486,59 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
 
 
 # ---------------------------------------------------------------- placement
+def _engine_runner(aggregator: str, normalize: bool, history_dtype,
+                   kernel_mode: str):
+    """The per-point engine call over split ``(hot, shared)`` input dicts
+    (``engine.split_inputs``): the hot dict rides the stacked point axis
+    (vmap ``in_axes=0`` / shard_map point spec) and is the donation
+    target; the shared dict is the seed-major data plane (unmapped /
+    replicated, never donated)."""
+    def runner(hot, shared):
+        return run_engine(merge_inputs(hot, shared), aggregator=aggregator,
+                          normalize=normalize, history_dtype=history_dtype,
+                          kernel_mode=kernel_mode)
+
+    return runner
+
+
 @functools.lru_cache(maxsize=None)
 def _vmap_runner(aggregator: str, normalize: bool, history_dtype,
-                 seed_shared: bool):
-    def runner(inp):
-        return run_engine(inp, aggregator=aggregator, normalize=normalize,
-                          history_dtype=history_dtype)
-
-    return jax.vmap(runner, in_axes=(_per_field(None, 0, seed_shared),))
+                 kernel_mode: str, donate: bool):
+    """jit(vmap(run_engine)) over the stacked point axis — cached like
+    ``_sharded_runner``.  ``donate=True`` hands the hot (stacked) input
+    dict to XLA for buffer reuse: a big bucketed grid does not hold the
+    caller's copy of the stacked planes alive next to the running
+    program's working set.  The shared data plane is never donated."""
+    fn = jax.vmap(_engine_runner(aggregator, normalize, history_dtype,
+                                 kernel_mode), in_axes=(0, None))
+    return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_runner(aggregator: str, normalize: bool, history_dtype,
-                    mesh, spec, seed_shared: bool):
+                    mesh, spec, kernel_mode: str, donate: bool):
     """jit(shard_map(vmap(run_engine))) — cached so repeated sweeps with
     the same static config reuse the compiled executable instead of paying
     a fresh trace + compile per call (jit caches by callable identity; a
     multi-bucket plan compiles one program per bucket *shape* under the
-    same cached callable)."""
+    same cached callable).  ``spec`` shards every hot (stacked) leaf over
+    the mesh point axis; the shared data plane is replicated
+    (``sweep_data_spec``).  ``donate`` as in ``_vmap_runner``."""
     from jax.experimental.shard_map import shard_map
 
-    inner = _vmap_runner(aggregator, normalize, history_dtype, seed_shared)
-    sharded = shard_map(
-        inner, mesh=mesh,
-        in_specs=(_per_field(sweep_data_spec(), spec, seed_shared),),
-        out_specs=spec)
-    return jax.jit(sharded)
+    inner = jax.vmap(_engine_runner(aggregator, normalize, history_dtype,
+                                    kernel_mode), in_axes=(0, None))
+    # shard_map has no replication rule for pallas_call, so the
+    # fused-kernel modes cannot lower with the checker on; keep it for
+    # the pure-XLA mode, where it still guards the replicated data plane
+    sharded = shard_map(inner, mesh=mesh,
+                        in_specs=(spec, sweep_data_spec()),
+                        out_specs=spec, check_rep=(kernel_mode == "xla"))
+    return jax.jit(sharded, donate_argnums=(0,) if donate else ())
 
 
-def execute_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto"
+def execute_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto",
+                 donate: bool = True
                  ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Run a plan's buckets — one compiled call each — and merge outputs.
 
@@ -526,6 +554,14 @@ def execute_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto"
     the weight shardings); ``"vmap"`` forces the single-device path;
     ``"shard"`` requires the sharded path for every bucket and raises if
     the mesh cannot take one.
+
+    ``donate`` (default True): each bucket's stacked hot input planes are
+    donated to its compiled call, so a big grid never holds the plan's
+    copy of the stacked state next to the run's working set.  The shared
+    seed-major data plane is never donated (all buckets alias it).  After
+    a donated execute the plan's bucket inputs are CONSUMED — re-running
+    the same ``SweepPlan`` object requires ``donate=False`` (or a fresh
+    plan; ``run_sweep`` re-plans per call either way).
     """
     if placement not in ("auto", "vmap", "shard"):
         raise ValueError(f"unknown placement {placement!r}")
@@ -553,13 +589,36 @@ def execute_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto"
     clock = np.zeros((P_, Tg), np.float32)
     seed_shared = plan.n_seeds == 1
     for b, spec in zip(plan.buckets, specs):
-        if spec == PartitionSpec():
-            outs = _vmap_runner(plan.aggregator, plan.normalize,
-                                plan.history_dtype, seed_shared)(b.inputs)
-        else:
-            outs = _sharded_runner(plan.aggregator, plan.normalize,
-                                   plan.history_dtype, mesh, spec,
-                                   seed_shared)(b.inputs)
+        if b.inputs is None:
+            raise ValueError(
+                "this SweepPlan's bucket inputs were consumed by a "
+                "previous donated execute_plan/run_plan; build a fresh "
+                "plan, or run with donate=False to keep a plan re-runnable")
+        hot, shared = split_inputs(b.inputs, shared_seed_idx=seed_shared)
+        with warnings.catch_warnings():
+            # expected under donation: the engine's [P, T] outputs are far
+            # smaller than the stacked input planes, so XLA rarely finds
+            # an input-output alias — the reference release below is the
+            # real win
+            warnings.filterwarnings(
+                "ignore", message="Some donated buffers were not usable")
+            if spec == PartitionSpec():
+                outs = _vmap_runner(plan.aggregator, plan.normalize,
+                                    plan.history_dtype, plan.kernel_mode,
+                                    donate)(hot, shared)
+            else:
+                outs = _sharded_runner(plan.aggregator, plan.normalize,
+                                       plan.history_dtype, mesh, spec,
+                                       plan.kernel_mode, donate)(hot, shared)
+        if donate:
+            # the compiled call has consumed the stacked planes: drop the
+            # plan's reference so it stops pinning the caller-side copy
+            # (the shared data plane stays — every bucket and same-seed
+            # point aliases it).  Only after a SUCCESSFUL dispatch: a
+            # bucket that failed to compile/run stays intact, so the plan
+            # remains retryable
+            b.inputs = None
+        del hot
         a, l, g, c = (np.asarray(o) for o in outs)
         ids = np.asarray(b.point_ids)
         Tb = a.shape[1]
@@ -572,12 +631,15 @@ def execute_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto"
     return acc, loss, gn, clock
 
 
-def run_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto"
-             ) -> SweepResult:
+def run_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto",
+             donate: bool = True) -> SweepResult:
     """Execute a prepared plan and package a ``SweepResult`` — lets callers
-    inspect/log the bucket plan (``plan.describe()``) before running it."""
+    inspect/log the bucket plan (``plan.describe()``) before running it.
+    ``donate`` as in ``execute_plan`` (donated bucket inputs are consumed
+    — pass False to keep the plan re-runnable)."""
     accs, losses, deltas, clocks = execute_plan(plan, mesh=mesh,
-                                                placement=placement)
+                                                placement=placement,
+                                                donate=donate)
     return SweepResult(
         points=plan.points,
         accuracy=accs, loss=losses, grad_norm=deltas, sim_clock=clocks,
@@ -592,6 +654,7 @@ def run_sweep(setting: BHFLSetting, seeds=(0,), *,
               device_stragglers: str = "temporary",
               edge_stragglers: str = "temporary",
               normalize: bool = False, history_dtype=None,
+              kernel_mode: str = "auto",
               mesh=None, placement: str = "auto",
               max_buckets: int = 4, bucket_waste: float = 1.25,
               **sim_kw) -> SweepResult:
@@ -612,6 +675,7 @@ def run_sweep(setting: BHFLSetting, seeds=(0,), *,
                       aggregator=aggregator,
                       device_stragglers=device_stragglers,
                       edge_stragglers=edge_stragglers, normalize=normalize,
-                      history_dtype=history_dtype, max_buckets=max_buckets,
+                      history_dtype=history_dtype, kernel_mode=kernel_mode,
+                      max_buckets=max_buckets,
                       bucket_waste=bucket_waste, **sim_kw)
     return run_plan(plan, mesh=mesh, placement=placement)

@@ -1,3 +1,30 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel plane — fused Pallas kernels + the backend-dispatch layer.
+
+One module per kernel, each with a pure-jnp oracle in ``ref.py`` that
+defines its semantics contract (tests sweep shapes/dtypes against it):
+
+  * ``hieavg_agg``      — fused HieAvg mix + history update (eq. 4/5),
+                          one HBM pass instead of XLA's ~7,
+  * ``sgd_update``      — the train-step masked SGD update,
+  * ``flash_attention`` — blocked online-softmax attention (the LLM
+                          serving path).
+
+``ops.py`` holds the jit'd pytree-level wrappers (batched/vmapped entry
+points matching the engine's dense ``[N, J, ...]`` + validity-mask
+conventions); ``dispatch.py`` is the backend policy — the
+``kernel_mode = "auto" | "pallas" | "interpret" | "xla"`` knob that routes
+the engine's hot path to the compiled kernel on TPU/GPU, the pure-XLA
+reference on CPU, or the Pallas interpreter for validation.  See
+docs/ARCHITECTURE.md §Kernel plane for the layer contract.
+"""
+from .dispatch import KERNEL_MODES, default_interpret, resolve_kernel_mode
+from .ops import (flash_attention, fused_edge_aggregate,
+                  fused_edge_aggregate_batched, fused_mix_and_update,
+                  fused_sgd_update)
+
+__all__ = [
+    "KERNEL_MODES", "default_interpret", "resolve_kernel_mode",
+    "flash_attention", "fused_edge_aggregate",
+    "fused_edge_aggregate_batched", "fused_mix_and_update",
+    "fused_sgd_update",
+]

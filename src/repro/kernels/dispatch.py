@@ -1,0 +1,144 @@
+"""Kernel-plane backend dispatch — who runs a fused op, and how.
+
+Every compute hot-spot with a Pallas kernel has THREE executable forms:
+
+  * ``pallas``    — the compiled ``pallas_call`` (TPU/GPU; fails to lower
+                    on CPU, which has no Mosaic backend),
+  * ``interpret`` — the same kernel through the Pallas interpreter
+                    (jax-level emulation: traceable, jittable, correct
+                    everywhere, slower — the CPU validation path),
+  * ``xla``       — the pure-jnp reference path (``core.hieavg``'s fused
+                    ``_mix_and_update`` tree.map / the plain SGD tree.map),
+                    which XLA fuses well on CPU.
+
+This module is the single place that picks between them.  The knob is a
+``kernel_mode`` string threaded ``BHFLSimulator``/``run_sweep`` →
+``run_engine`` (like ``history_dtype``):
+
+  * ``"auto"``      — ``pallas`` on TPU/GPU, ``xla`` on CPU.  The default
+                      everywhere: accelerators get the one-HBM-pass fused
+                      kernels, CPU keeps the XLA path with zero overhead
+                      (never the interpreter loop).
+  * ``"pallas"`` / ``"interpret"`` / ``"xla"`` — force a path (tests pin
+                      ``interpret`` vs ``xla`` engine parity on CPU).
+
+``default_interpret()`` is the companion policy for DIRECT kernel calls
+(``ops.flash_attention``, ``hieavg_agg`` benchmarks): when the caller
+passes ``interpret=None`` the kernel compiles on TPU/GPU and interprets on
+CPU — previously ``interpret=True`` was hard-coded "until the launch layer
+flips it off", which nothing ever did, so real hardware silently ran the
+interpreter.
+
+Layering: this module imports only jax + ``core.hieavg`` at module level
+and pulls the kernel wrappers (``ops``) in lazily, so the kernel modules
+may import ``default_interpret`` from here without a cycle.
+
+The dispatch entry points (``edge_aggregate_batched``,
+``global_aggregate``, ``sgd_update``) mirror the engine's calling
+conventions exactly — batched ``[N, J, ...]`` stacked trees with validity
+masks, traced ``gamma0``/``lam`` scalars — and guarantee the same
+padded-slot no-op contract as the XLA path (zero part-weight padding
+contributes exactly nothing; see docs/ARCHITECTURE.md §Kernel plane).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hieavg
+from repro.core.hieavg import History
+
+PyTree = Any
+
+#: The accepted ``kernel_mode`` values, in resolution order.
+KERNEL_MODES = ("auto", "pallas", "interpret", "xla")
+
+#: Backends with a real Pallas lowering (Mosaic / Triton).
+_COMPILED_BACKENDS = ("tpu", "gpu", "cuda", "rocm")
+
+
+def resolve_kernel_mode(mode: str = "auto") -> str:
+    """Resolve a ``kernel_mode`` knob to a concrete path.
+
+    ``"auto"`` → ``"pallas"`` when the default jax backend can compile
+    Pallas kernels (TPU/GPU), else ``"xla"`` — never ``"interpret"``: the
+    interpreter is a validation tool, not a production path.  Explicit
+    modes pass through; unknown strings raise naming the valid set.
+    Callers resolve once (host-side) so jit caches key on the concrete
+    mode, not on ``"auto"``.
+    """
+    if mode not in KERNEL_MODES:
+        raise ValueError(
+            f"unknown kernel_mode {mode!r}; expected one of {KERNEL_MODES}")
+    if mode != "auto":
+        return mode
+    return "pallas" if jax.default_backend() in _COMPILED_BACKENDS else "xla"
+
+
+def default_interpret() -> bool:
+    """Interpret flag for direct kernel calls when the caller didn't pick:
+    compile on TPU/GPU, interpret on CPU (where Pallas cannot lower)."""
+    return jax.default_backend() not in _COMPILED_BACKENDS
+
+
+def _interpret(mode: str) -> bool:
+    """The ``pallas_call`` interpret flag for a resolved fused mode."""
+    return mode == "interpret"
+
+
+# --------------------------------------------------------- engine dispatch
+def edge_aggregate_batched(stacked_w: PyTree, mask: jnp.ndarray,
+                           history: History, valid: jnp.ndarray,
+                           gamma0, lam, normalize: bool = False, *,
+                           mode: str = "auto") -> tuple[PyTree, History]:
+    """Eq. (4) for all N edges — ``hieavg.edge_aggregate_batched``
+    semantics, routed through the fused kernel when ``mode`` says so.
+
+    stacked_w leaves ``[N, J, ...]``; mask/valid ``[N, J]``; history
+    likewise; ``gamma0``/``lam`` may be traced.  Padded slots
+    (``valid`` False) carry zero part weight on every path.
+    """
+    mode = resolve_kernel_mode(mode)
+    if mode == "xla":
+        return hieavg.edge_aggregate_batched(stacked_w, mask, history,
+                                             valid, gamma0, lam, normalize)
+    from . import ops
+    return ops.fused_edge_aggregate_batched(
+        stacked_w, mask, history, valid, gamma0, lam, normalize,
+        interpret=_interpret(mode))
+
+
+def global_aggregate(stacked_w: PyTree, mask: jnp.ndarray, history: History,
+                     part_weights: jnp.ndarray, gamma0, lam,
+                     normalize: bool = False, *, mode: str = "auto"
+                     ) -> tuple[PyTree, History]:
+    """Eq. (5) on the leader — ``hieavg.aggregate`` semantics (traced
+    ``part_weights``/``gamma0``/``lam``), fused-kernel routed."""
+    mode = resolve_kernel_mode(mode)
+    if mode == "xla":
+        return hieavg.aggregate(stacked_w, mask, history, part_weights,
+                                gamma0, lam, normalize)
+    from . import ops
+    return ops.fused_mix_and_update(stacked_w, mask, history, part_weights,
+                                    gamma0, lam, normalize,
+                                    interpret=_interpret(mode))
+
+
+def sgd_update(params: PyTree, grads: PyTree, scale, *,
+               mode: str = "auto") -> PyTree:
+    """The train-step inner update ``w - scale * g`` per leaf.
+
+    ``scale`` is the (traced) lr × step-validity product — a padded sweep
+    step passes 0 and the update is exact identity on every path.  The
+    fused path does the read-modify-write in one pass per ``[D, L]`` leaf
+    (oracle: ``ref.sgd_update_ref``); ``xla`` is the engine's original
+    ``tree.map``, bit-identical to what ``run_engine`` always did.
+    """
+    mode = resolve_kernel_mode(mode)
+    if mode == "xla":
+        return jax.tree.map(lambda w, g: w - scale * g, params, grads)
+    from . import ops
+    return ops.fused_sgd_update(params, grads, scale,
+                                interpret=_interpret(mode))

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .dispatch import default_interpret
+
 BQ = 256
 BK = 256
 NEG_INF = -2.0 ** 30
@@ -74,13 +76,16 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                                              "interpret"))
 def flash_attention_1h(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                        causal: bool = True, window: Optional[int] = None,
-                       q_offset: int = 0, interpret: bool = True
+                       q_offset: int = 0, interpret: bool | None = None
                        ) -> jnp.ndarray:
     """Single-head flash attention. q [Sq, D], k/v [Skv, D] -> [Sq, D].
 
     Sq/Skv are padded to the block sizes; D to 128 lanes.  Semantics =
-    ``repro.kernels.ref.flash_attention_ref``.
+    ``repro.kernels.ref.flash_attention_ref``.  ``interpret=None``
+    auto-detects the backend (compiled on TPU/GPU, interpreter on CPU).
     """
+    if interpret is None:
+        interpret = default_interpret()
     sq, d = q.shape
     skv = k.shape[0]
     scale = 1.0 / (d ** 0.5)                      # pre-pad head_dim scale

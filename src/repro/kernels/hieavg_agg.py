@@ -14,6 +14,12 @@ TILE = 2048 f32 lanes → ≤ 0.8 MB/operand·block, comfortably inside the
 ~16 MB VMEM budget) and writes the aggregate tile plus both history tiles.
 The per-participant coefficients (mask, γ-decay, 1/J weights) are tiny [n]
 vectors computed outside and broadcast in VMEM.
+
+Batched callers (the engine's ``[N, J, ...]`` dense layout, the sweep
+fabric's stacked ``[P]`` point axis) ``vmap`` this kernel — Pallas
+prepends the mapped axes as grid dimensions (see
+``ops.fused_edge_aggregate_batched``).  Backend selection (compiled vs
+interpreter vs the XLA reference path) lives in ``kernels.dispatch``.
 """
 from __future__ import annotations
 
@@ -22,6 +28,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from .dispatch import default_interpret
 
 TILE = 2048
 
@@ -52,12 +60,19 @@ def _kernel(w_ref, prev_ref, dmean_ref, vec_ref,
 def hieavg_agg(w: jnp.ndarray, prev: jnp.ndarray, dmean: jnp.ndarray,
                mask: jnp.ndarray, coef_present: jnp.ndarray,
                coef_est: jnp.ndarray, n_obs: jnp.ndarray,
-               interpret: bool = True):
+               interpret: bool | None = None):
     """Fused aggregate + history update on one flat [n, L] leaf.
 
     Returns (agg [L], new_prev [n, L], new_dmean [n, L]).  Semantics =
-    ``repro.kernels.ref.hieavg_agg_ref``.
+    ``repro.kernels.ref.hieavg_agg_ref``.  ``interpret=None`` auto-detects
+    the backend (``dispatch.default_interpret``): compiled ``pallas_call``
+    on TPU/GPU, interpreter on CPU.  History leaves (``prev``/``dmean``)
+    may carry a narrower storage dtype than ``w`` (the engine's
+    ``history_dtype`` knob) — math is f32, each output casts back to its
+    own operand's dtype.
     """
+    if interpret is None:
+        interpret = default_interpret()
     n, l = w.shape
     pad = (-l) % TILE
     if pad:

@@ -1,15 +1,34 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-``fused_edge_aggregate`` mirrors ``repro.core.hieavg.edge_aggregate``'s
-semantics on a stacked pytree, dispatching each leaf (flattened to [n, L])
-through the fused kernel — one HBM pass per leaf instead of XLA's ~7.
+The HieAvg entry points mirror ``repro.core.hieavg`` semantics on stacked
+pytrees, dispatching each leaf (flattened to ``[n, L]``) through the fused
+``hieavg_agg`` kernel — one HBM pass per leaf instead of XLA's ~7:
+
+  * ``fused_mix_and_update`` — the kernel analogue of
+    ``hieavg._mix_and_update`` (eq. 4/5): traced ``part_weights`` /
+    ``gamma0`` / ``lam``, composes under ``vmap``/``scan`` inside the
+    engine's compiled program.
+  * ``fused_edge_aggregate_batched`` — the engine's dense layer API
+    (eq. 4 for all N edges at once): ``[N, J, ...]`` stacked leaves, a
+    ``valid`` mask whose padded slots carry zero part weight (numeric
+    no-ops, exactly like ``hieavg.edge_aggregate_batched``), the kernel
+    vmapped over the edge axis (Pallas prepends it — and the sweep
+    fabric's stacked ``[P]`` point axis above it — as grid dimensions).
+  * ``fused_edge_aggregate`` — the original single-edge API (eq. 4,
+    static ``gamma0``/``lam``), kept for direct callers and benchmarks.
+
+``fused_sgd_update`` is the train-step inner loop: the masked SGD update
+``w − (lr·ok)·g`` in one pass per leaf (``kernels.sgd_update``).
 
 ``flash_attention`` is the multi-head GQA front-end of the single-head
 kernel: batch, kv-head and group dims are vmapped (Pallas prepends them as
 grid dimensions).
 
-``interpret=True`` everywhere in this container (CPU validation of a TPU
-kernel); the launch layer flips it off on real hardware.
+Every wrapper takes ``interpret=None`` = backend auto-detection
+(``dispatch.default_interpret``): compiled ``pallas_call`` on TPU/GPU,
+interpreter on CPU.  The engine does not call these directly — it goes
+through ``kernels.dispatch`` so ``kernel_mode="xla"``/``"auto"`` can route
+to the pure-XLA reference path instead.
 """
 from __future__ import annotations
 
@@ -20,32 +39,40 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hieavg import History
+from .dispatch import default_interpret
 from .flash_attention import flash_attention_1h
 from .hieavg_agg import hieavg_agg
+from .sgd_update import sgd_update
 
 PyTree = Any
 
 
 # ----------------------------------------------------------------- hieavg
-@functools.partial(jax.jit, static_argnames=("gamma0", "lam", "normalize",
-                                             "interpret"))
-def fused_edge_aggregate(stacked_w: PyTree, mask: jnp.ndarray,
-                         history: History, *, gamma0: float = 0.9,
-                         lam: float = 0.9, normalize: bool = False,
-                         interpret: bool = True) -> tuple[PyTree, History]:
-    """Kernel-fused equivalent of ``hieavg.edge_aggregate`` (eq. 4).
+def fused_mix_and_update(stacked_w: PyTree, mask: jnp.ndarray,
+                         history: History, part_weights: jnp.ndarray,
+                         gamma0, lam, normalize: bool = False, *,
+                         interpret: Optional[bool] = None
+                         ) -> tuple[PyTree, History]:
+    """Kernel-fused ``hieavg._mix_and_update`` (eq. 4/5) on [n, ...] leaves.
 
-    Returns (edge model, updated History) — allclose to the core path.
+    ``part_weights``/``gamma0``/``lam`` may be traced (the engine sweeps
+    decay factors as data) — the tiny per-participant coefficient vectors
+    are computed in XLA and broadcast into the kernel, which does the
+    heavy [n, L] mix + history update in one HBM pass per leaf.  An
+    all-zero ``part_weights`` row (sweep-fabric padding) contributes
+    exactly nothing.  Returns (aggregate, updated History) — allclose to
+    the core path; no jit boundary, composes under vmap/scan.
     """
-    n = mask.shape[0]
+    if interpret is None:
+        interpret = default_interpret()
     m = mask.astype(jnp.float32)
-    part_weights = jnp.full((n,), 1.0 / n, jnp.float32)
-    gamma = gamma0 * lam ** (history.miss_count + 1.0)
+    gamma = gamma0 * lam ** (history.miss_count + 1.0)    # k' >= 1
     coef = part_weights * (m + (1.0 - m) * gamma)
     if normalize:
         coef = coef / jnp.maximum(jnp.sum(coef), 1e-12)
     coef_present = coef * m
     coef_est = coef * (1.0 - m)
+    n = mask.shape[0]
 
     leaves_w, treedef = jax.tree_util.tree_flatten(stacked_w)
     leaves_p = treedef.flatten_up_to(history.prev_w)
@@ -71,12 +98,81 @@ def fused_edge_aggregate(stacked_w: PyTree, mask: jnp.ndarray,
     return jax.tree_util.tree_unflatten(treedef, aggs), new_hist
 
 
+def fused_edge_aggregate_batched(stacked_w: PyTree, mask: jnp.ndarray,
+                                 history: History, valid: jnp.ndarray,
+                                 gamma0, lam, normalize: bool = False, *,
+                                 interpret: Optional[bool] = None
+                                 ) -> tuple[PyTree, History]:
+    """Eq. (4) for ALL N edges through the fused kernel in one vmapped call.
+
+    Mirrors ``hieavg.edge_aggregate_batched`` exactly: stacked_w leaves
+    ``[N, J, ...]``, mask/valid ``[N, J]``, per-edge part weights
+    ``valid / J_e`` (zero on padded slots, so padding stays a numeric
+    no-op).  The edge axis is vmapped over the kernel — Pallas prepends it
+    (and any sweep-stacked ``[P]`` axis above) as grid dimensions, so one
+    ``pallas_call`` per leaf covers the whole dense layout.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    v = valid.astype(jnp.float32)
+    pw = v / jnp.maximum(jnp.sum(v, axis=-1, keepdims=True), 1.0)
+
+    def one_edge(w, m, h, p):
+        return fused_mix_and_update(w, m, h, p, gamma0, lam, normalize,
+                                    interpret=interpret)
+
+    return jax.vmap(one_edge)(stacked_w, mask, history, pw)
+
+
+@functools.partial(jax.jit, static_argnames=("gamma0", "lam", "normalize",
+                                             "interpret"))
+def fused_edge_aggregate(stacked_w: PyTree, mask: jnp.ndarray,
+                         history: History, *, gamma0: float = 0.9,
+                         lam: float = 0.9, normalize: bool = False,
+                         interpret: Optional[bool] = None
+                         ) -> tuple[PyTree, History]:
+    """Kernel-fused equivalent of ``hieavg.edge_aggregate`` (eq. 4).
+
+    The single-edge API (uniform 1/n part weights, static decay factors)
+    — direct callers and ``benchmarks/kernel_bench``.  Returns
+    (edge model, updated History) — allclose to the core path.
+    """
+    n = mask.shape[0]
+    pw = jnp.full((n,), 1.0 / n, jnp.float32)
+    return fused_mix_and_update(stacked_w, mask, history, pw, gamma0, lam,
+                                normalize, interpret=interpret)
+
+
+# -------------------------------------------------------------------- sgd
+def fused_sgd_update(params: PyTree, grads: PyTree, scale, *,
+                     interpret: Optional[bool] = None) -> PyTree:
+    """Masked SGD update ``w − scale·g`` in one fused pass per leaf.
+
+    ``scale`` is the (traced) lr × step-validity scalar — the sweep
+    fabric's padded steps pass 0 and the update is an exact identity.
+    Leaves carry a leading stacked-device dim ``[D, ...]`` and are
+    flattened to ``[D, L]`` for the kernel.  Oracle:
+    ``ref.sgd_update_ref``; XLA reference path: the engine's plain
+    ``tree.map`` (``dispatch.sgd_update(mode="xla")``).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+
+    def one(w, g):
+        n = w.shape[0]
+        out = sgd_update(w.reshape(n, -1), g.reshape(n, -1), scale,
+                         interpret=interpret)
+        return out.reshape(w.shape)
+
+    return jax.tree.map(one, params, grads)
+
+
 # ------------------------------------------------------------------ flash
 @functools.partial(jax.jit, static_argnames=("causal", "window", "q_offset",
                                              "interpret"))
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: Optional[int] = None,
-                    q_offset: int = 0, interpret: bool = True
+                    q_offset: int = 0, interpret: Optional[bool] = None
                     ) -> jnp.ndarray:
     """GQA flash attention. q [B,Sq,H,Dh]; k/v [B,Skv,Hkv,Dh] -> like q.
 

@@ -39,6 +39,19 @@ def hieavg_agg_ref(w: jnp.ndarray, prev: jnp.ndarray, dmean: jnp.ndarray,
             new_dmean.astype(dmean.dtype))
 
 
+# -------------------------------------------------------------- sgd_update
+def sgd_update_ref(w: jnp.ndarray, g: jnp.ndarray, scale) -> jnp.ndarray:
+    """Masked SGD update on one flat leaf: ``w - scale * g``.
+
+    ``scale`` is a scalar (lr × step-validity — 0 for a padded sweep step,
+    which makes the update an exact identity).  Math in f32, output cast
+    back to ``w.dtype``.
+    """
+    f32 = jnp.float32
+    s = jnp.asarray(scale, f32)
+    return (w.astype(f32) - s * g.astype(f32)).astype(w.dtype)
+
+
 # --------------------------------------------------------- flash attention
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                         causal: bool = True,

@@ -1,12 +1,13 @@
 from .mesh import (make_production_mesh, make_debug_mesh, make_sweep_mesh,
                    mesh_axis_size, PEAK_FLOPS_BF16, HBM_BW, ICI_BW)
+from .sharding import resolve_kernel_mode
 from .steps import (make_hfl_train_step, make_prefill_step, make_serve_step,
                     make_train_step, init_fl_histories)
 from .inputs import input_specs, train_input_specs, serve_input_specs
 
 __all__ = [
     "make_production_mesh", "make_debug_mesh", "make_sweep_mesh",
-    "mesh_axis_size",
+    "mesh_axis_size", "resolve_kernel_mode",
     "PEAK_FLOPS_BF16", "HBM_BW", "ICI_BW",
     "make_hfl_train_step", "make_prefill_step", "make_serve_step",
     "make_train_step", "init_fl_histories",

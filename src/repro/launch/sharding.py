@@ -27,8 +27,16 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.kernels.dispatch import resolve_kernel_mode  # noqa: F401
 from repro.models import ParamSpec
 from repro.models.spec import PyTree
+
+# ``resolve_kernel_mode`` is re-exported here on purpose: the launch layer
+# resolves WHERE a program runs (mesh placement, the autoscaling specs
+# below) and HOW its hot loops execute (kernel-plane backend — compiled
+# Pallas on TPU/GPU, XLA reference on CPU) side by side, from the same
+# runtime facts.  The policy itself lives in ``repro.kernels.dispatch`` so
+# the kernel plane stays self-contained.
 
 Axis = Union[str, tuple]        # one candidate: mesh axis or axis tuple
 Rule = tuple                    # priority-ordered candidates
@@ -77,7 +85,7 @@ SERVE_RULES = {
 # ``dev_time``/``cons_time`` draws (PR 3), so a consensus-latency×topology
 # grid shards its time accounting alongside its training data with no
 # extra rules.  The one exception is the seed-major data plane
-# (``sweep.SHARED_DATA_FIELDS``): train/test/init arrays carry a
+# (``engine.SHARED_DATA_FIELDS``): train/test/init arrays carry a
 # ``[n_seeds]`` seed axis instead of the point axis and are replicated on
 # every device (``sweep_data_spec``) — device-resident data scales with
 # distinct seeds, not grid points.

@@ -1,0 +1,290 @@
+"""Kernel plane: backend dispatch, fused-kernel engine parity, donation.
+
+Three pin groups (see docs/ARCHITECTURE.md §Kernel plane):
+
+  * kernel oracles — ``hieavg_agg`` / ``sgd_update`` against their
+    pure-jnp refs across tile-tail shapes (L not a multiple of TILE,
+    L < TILE) and the mixed-dtype bf16 ``history_dtype`` layout,
+  * engine parity — ``kernel_mode="interpret"`` (the fused kernels
+    through the Pallas interpreter, the only kernel execution CPU has)
+    must reproduce the pure-XLA engine on standalone runs AND across a
+    padded multi-bucket sweep grid; the 4-device shard_map pin lives in
+    ``test_multidevice_sweep.py``,
+  * donation — the donated engine/sweep entries return the same numbers
+    as the non-donated ones, never consume the shared data plane, and a
+    donated plan is consumed exactly once.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.bhfl_cnn import REDUCED
+from repro.core import hieavg
+from repro.fl import BHFLSimulator, build_inputs, plan_sweep, run_plan, \
+    run_sweep
+from repro.fl.engine import (SHARED_DATA_FIELDS, run_engine,
+                             run_engine_donated, split_inputs)
+from repro.kernels import dispatch as kd
+from repro.kernels.ops import (fused_edge_aggregate_batched,
+                               fused_mix_and_update)
+from repro.kernels.ref import sgd_update_ref
+from repro.kernels.sgd_update import TILE, sgd_update
+
+TINY = dataclasses.replace(REDUCED, t_global_rounds=3, n_edges=3,
+                           j_per_edge=3, image_hw=8)
+KW = dict(n_train=300, n_test=100, steps_per_epoch=2)
+
+
+def _sim(kernel_mode="auto", **kw):
+    return BHFLSimulator(TINY, "hieavg", "temporary", "temporary",
+                         kernel_mode=kernel_mode, **KW, **kw)
+
+
+def _close(a, b, *, acc_atol=1e-6):
+    np.testing.assert_allclose(b.accuracy, a.accuracy, atol=acc_atol)
+    np.testing.assert_allclose(b.loss, a.loss, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(b.grad_norm, a.grad_norm, rtol=1e-4,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------- dispatch
+def test_resolve_kernel_mode_cpu_auto_is_xla():
+    """On CPU "auto" must pick the XLA reference — never the interpreter
+    (the satellite bugfix: nothing ever 'flips interpret off', so the
+    default has to be backend detection, and CPU has no Pallas backend)."""
+    assert jax.default_backend() == "cpu"
+    assert kd.resolve_kernel_mode("auto") == "xla"
+    assert kd.default_interpret() is True
+    for mode in ("pallas", "interpret", "xla"):
+        assert kd.resolve_kernel_mode(mode) == mode
+
+
+def test_unknown_kernel_mode_raises_naming_the_choices():
+    with pytest.raises(ValueError, match="auto"):
+        kd.resolve_kernel_mode("mosaic")
+    with pytest.raises(ValueError, match="kernel_mode"):
+        BHFLSimulator(TINY, kernel_mode="nope", **KW)
+    with pytest.raises(ValueError, match="kernel_mode"):
+        run_sweep(TINY, kernel_mode="nope", **KW)
+
+
+# ----------------------------------------------------------- kernel oracles
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 9),
+       l=st.sampled_from([1, 7, 100, TILE - 1, TILE, TILE + 1, 3 * TILE]),
+       seed=st.integers(0, 99))
+def test_sgd_update_matches_ref_on_tile_tails(n, l, seed):
+    ks = jax.random.split(jax.random.key(seed), 2)
+    w = jax.random.normal(ks[0], (n, l))
+    g = jax.random.normal(ks[1], (n, l))
+    got = sgd_update(w, g, jnp.float32(0.37), interpret=True)
+    ref = sgd_update_ref(w, g, 0.37)
+    # 1-ulp slack: XLA may contract the multiply-subtract into an FMA in
+    # one lowering and not the other
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_sgd_update_zero_scale_is_exact_identity():
+    """scale = lr x step-validity: a padded sweep step (0) must be an
+    exact no-op, bitwise."""
+    w = jax.random.normal(jax.random.key(0), (4, 333))
+    g = jax.random.normal(jax.random.key(1), (4, 333)) * 1e3
+    got = sgd_update(w, g, jnp.float32(0.0), interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(w))
+
+
+def test_sgd_update_bf16_storage():
+    w = jax.random.normal(jax.random.key(0), (3, 100), jnp.bfloat16)
+    g = jax.random.normal(jax.random.key(1), (3, 100), jnp.bfloat16)
+    got = sgd_update(w, g, jnp.float32(0.1), interpret=True)
+    assert got.dtype == jnp.bfloat16
+    ref = sgd_update_ref(w, g, 0.1)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), rtol=1e-6,
+                               atol=1e-7)
+
+
+@pytest.mark.parametrize("l", [1, 40, TILE + 3])
+def test_hieavg_agg_mixed_history_dtype(l):
+    """The engine's ``history_dtype`` layout: f32 submissions, bf16
+    history leaves — each kernel output casts back to its own operand's
+    dtype (the history stays bf16, the aggregate stays f32)."""
+    from repro.kernels.hieavg_agg import hieavg_agg
+    from repro.kernels.ref import hieavg_agg_ref
+
+    n = 5
+    ks = jax.random.split(jax.random.key(3), 5)
+    w = jax.random.normal(ks[0], (n, l))
+    prev = jax.random.normal(ks[1], (n, l), jnp.bfloat16)
+    dmean = (jax.random.normal(ks[2], (n, l)) * 0.1).astype(jnp.bfloat16)
+    mask = jax.random.bernoulli(ks[3], 0.6, (n,))
+    cp = jax.random.uniform(ks[4], (n,))
+    ce = (1.0 - cp) * 0.3
+    nobs = jnp.arange(n, dtype=jnp.float32)
+    ref = hieavg_agg_ref(w, prev, dmean, mask, cp, ce, nobs)
+    got = hieavg_agg(w, prev, dmean, mask, cp, ce, nobs, interpret=True)
+    assert got[0].dtype == jnp.float32
+    assert got[1].dtype == got[2].dtype == jnp.bfloat16
+    for r, g in zip(ref, got):
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(r, np.float32), atol=6e-2)
+
+
+def test_fused_batched_matches_core_batched_with_padding():
+    """The engine's dense-layer entry: fused [N, J] aggregation ==
+    ``hieavg.edge_aggregate_batched`` on a validity-masked layout with
+    garbage in the padded slots, traced gamma/lam."""
+    n_edges, j = 3, 4
+    ks = jax.random.split(jax.random.key(0), 3)
+    w = {"a": jax.random.normal(ks[0], (n_edges, j, 5, 3)),
+         "b": jax.random.normal(ks[1], (n_edges, j, 17))}
+    valid = jnp.asarray([[1, 1, 1, 0], [1, 1, 0, 0], [1, 1, 1, 1]], bool)
+    mask = jax.random.bernoulli(ks[2], 0.6, (n_edges, j)) & valid
+    hist = hieavg.init_history_batched(w)
+    w1 = jax.tree.map(lambda x: x * 1.1 + 0.1, w)
+    hist = hieavg.update_history_batched(hist, w1, valid)
+    g0, lam = jnp.float32(0.9), jnp.float32(0.8)
+    for normalize in (False, True):
+        a_ref, h_ref = hieavg.edge_aggregate_batched(
+            w1, mask, hist, valid, g0, lam, normalize)
+        a_got, h_got = fused_edge_aggregate_batched(
+            w1, mask, hist, valid, g0, lam, normalize, interpret=True)
+        for k in w:
+            np.testing.assert_allclose(np.asarray(a_got[k]),
+                                       np.asarray(a_ref[k]), atol=1e-6)
+            np.testing.assert_allclose(np.asarray(h_got.prev_w[k]),
+                                       np.asarray(h_ref.prev_w[k]),
+                                       atol=1e-6)
+            np.testing.assert_allclose(np.asarray(h_got.delta_mean[k]),
+                                       np.asarray(h_ref.delta_mean[k]),
+                                       atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(h_got.n_obs),
+                                      np.asarray(h_ref.n_obs))
+
+
+def test_fused_global_matches_core_traced_weights():
+    """Eq. (5) with J-weighted traced part weights — the engine's global
+    layer call."""
+    n = 3
+    w = {"p": jax.random.normal(jax.random.key(9), (n, 7, 2))}
+    hist = hieavg.init_history(w)
+    hist = hieavg.update_history(hist, jax.tree.map(lambda x: x * 1.1, w),
+                                 jnp.ones(n, bool))
+    j_arr = jnp.asarray([3.0, 2.0, 4.0])
+    pw = j_arr / jnp.sum(j_arr)
+    mask = jnp.asarray([True, False, True])
+    a_ref, _ = hieavg.aggregate(w, mask, hist, pw, jnp.float32(0.9),
+                                jnp.float32(0.9), True)
+    a_got, _ = fused_mix_and_update(w, mask, hist, pw, jnp.float32(0.9),
+                                    jnp.float32(0.9), True, interpret=True)
+    np.testing.assert_allclose(np.asarray(a_got["p"]),
+                               np.asarray(a_ref["p"]), atol=1e-6)
+
+
+# ------------------------------------------------------------ engine parity
+def test_engine_kernel_plane_matches_xla_standalone():
+    """The acceptance pin: fused-kernel engine == pure-XLA engine on a
+    standalone run (same inputs, same trajectories)."""
+    a = _sim(kernel_mode="xla").run()
+    b = _sim(kernel_mode="interpret").run()
+    _close(a, b)
+    np.testing.assert_allclose(b.sim_clock, a.sim_clock, rtol=1e-6)
+
+
+def test_engine_kernel_plane_bf16_history():
+    a = _sim(kernel_mode="xla", history_dtype=jnp.bfloat16).run()
+    b = _sim(kernel_mode="interpret", history_dtype=jnp.bfloat16).run()
+    _close(a, b, acc_atol=0.02)
+    np.testing.assert_allclose(b.loss, a.loss, rtol=1e-3, atol=1e-4)
+
+
+def test_auto_mode_on_cpu_is_bitwise_the_xla_engine():
+    """On CPU the default must add literally nothing: "auto" and "xla"
+    resolve to the same jit cache entry and the same numbers."""
+    a = _sim(kernel_mode="auto").run()
+    b = _sim(kernel_mode="xla").run()
+    np.testing.assert_array_equal(a.accuracy, b.accuracy)
+    np.testing.assert_array_equal(a.loss, b.loss)
+
+
+def test_sweep_kernel_plane_parity_multibucket():
+    """The acceptance pin, sweep edition: a padded multi-bucket
+    shape-changing grid through the fused kernels == the pure-XLA grid
+    per point, including padded points and the simulated clock."""
+    ovs = [{"n_edges": 2}, {"k_edge_rounds": 1}, {"t_global_rounds": 2},
+           {}]
+    plan_x = plan_sweep(TINY, overrides=ovs, kernel_mode="xla",
+                        max_buckets=2, bucket_waste=1.0, **KW)
+    plan_i = plan_sweep(TINY, overrides=ovs, kernel_mode="interpret",
+                        max_buckets=2, bucket_waste=1.0, **KW)
+    assert plan_x.kernel_mode == "xla"
+    assert plan_i.kernel_mode == "interpret"
+    assert len(plan_i.buckets) == 2
+    sx, si = run_plan(plan_x), run_plan(plan_i)
+    _close(sx, si)
+    np.testing.assert_allclose(si.sim_clock, sx.sim_clock, rtol=1e-5)
+    # ...and against standalone engine runs that never saw the fabric
+    for p, (ov, seed) in enumerate(si.points):
+        s = dataclasses.replace(TINY, **ov)
+        r = BHFLSimulator(s, "hieavg", "temporary", "temporary", seed=seed,
+                          kernel_mode="xla", **KW).run()
+        tv = int(si.t_valid[p])
+        np.testing.assert_allclose(si.accuracy[p, :tv], r.accuracy,
+                                   atol=1e-6)
+        np.testing.assert_allclose(si.loss[p, :tv], r.loss, rtol=1e-5,
+                                   atol=1e-6)
+
+
+# ---------------------------------------------------------------- donation
+def test_donated_engine_matches_non_donated():
+    """Donation smoke: same numbers, data plane never consumed."""
+    inp_a = build_inputs(_sim())
+    inp_b = build_inputs(_sim())
+    a = run_engine(inp_a)
+    b = run_engine_donated(inp_b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # the seed-major data plane is aliased by design and must survive
+    assert not inp_b.train_x.is_deleted()
+    assert not jax.tree.leaves(inp_b.init_w)[0].is_deleted()
+    # the non-donated entry leaves everything reusable
+    c = run_engine(inp_a)
+    np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(c[0]))
+
+
+def test_split_inputs_partition():
+    """Every EngineInputs field lands on exactly one side; the shared
+    side is exactly the data plane (+ seed_idx when plan-wide)."""
+    inp = build_inputs(_sim())
+    hot, shared = split_inputs(inp)
+    assert set(shared) == SHARED_DATA_FIELDS
+    hot2, shared2 = split_inputs(inp, shared_seed_idx=True)
+    assert set(shared2) == SHARED_DATA_FIELDS | {"seed_idx"}
+    assert not (set(hot) & set(shared))
+    assert set(hot) | set(shared) == set(hot2) | set(shared2)
+
+
+def test_donated_plan_matches_and_is_consumed_once():
+    ovs = [{"straggler_frac": 0.4}, {}]
+    ref = run_sweep(TINY, overrides=ovs, **KW)        # fresh plan per call
+    plan = plan_sweep(TINY, overrides=ovs, **KW)
+    got = run_plan(plan)                              # donate=True default
+    np.testing.assert_array_equal(got.accuracy, ref.accuracy)
+    np.testing.assert_array_equal(got.loss, ref.loss)
+    assert all(b.inputs is None for b in plan.buckets)
+    with pytest.raises(ValueError, match="consumed"):
+        run_plan(plan)
+    with pytest.raises(ValueError, match="consumed"):
+        plan.inputs          # the single-bucket accessor raises too
+    # donate=False keeps a plan re-runnable, same numbers both times
+    plan2 = plan_sweep(TINY, overrides=ovs, **KW)
+    r1 = run_plan(plan2, donate=False)
+    r2 = run_plan(plan2, donate=False)
+    assert all(b.inputs is not None for b in plan2.buckets)
+    np.testing.assert_array_equal(r1.accuracy, ref.accuracy)
+    np.testing.assert_array_equal(r2.accuracy, ref.accuracy)

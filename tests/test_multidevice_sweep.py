@@ -67,6 +67,15 @@ _CHILD = textwrap.dedent("""
                                atol=1e-6)
     np.testing.assert_allclose(seeded_s.sim_clock, seeded_v.sim_clock,
                                rtol=1e-5)
+
+    # kernel plane in the shard_map child: the fused kernels (Pallas
+    # interpreter on these host devices) under real 4-way sharding must
+    # reproduce the pure-XLA sharded grid per point
+    kp = run_sweep(TINY, overrides=ovs, placement="shard", max_buckets=1,
+                   kernel_mode="interpret", **KW)
+    np.testing.assert_allclose(kp.accuracy, b.accuracy, atol=1e-6)
+    np.testing.assert_allclose(kp.loss, b.loss, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(kp.sim_clock, b.sim_clock, rtol=1e-5)
     print("MULTIDEVICE_SWEEP_OK")
 """)
 
