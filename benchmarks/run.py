@@ -11,9 +11,10 @@ import argparse
 import functools
 import time
 
-from . import (ablations, bench_engine, bench_latency, bench_sweep,
-               fig2_convergence, fig3_sweeps, fig4_heterogeneity,
-               fig56_single_layer, fig7_latency, kernel_bench, roofline)
+from . import (ablations, bench_engine, bench_latency, bench_population,
+               bench_sweep, fig2_convergence, fig3_sweeps,
+               fig4_heterogeneity, fig56_single_layer, fig7_latency,
+               kernel_bench, roofline)
 
 SUITES = {
     "fig2": fig2_convergence.main,
@@ -27,6 +28,7 @@ SUITES = {
     "engine": bench_engine.main,
     "sweep": bench_sweep.main,
     "latency": bench_latency.main,
+    "population": bench_population.main,
 }
 
 
@@ -47,6 +49,8 @@ def main() -> None:
                                           emit_json=args.emit_json)
     suites["kernels"] = functools.partial(kernel_bench.main,
                                           emit_json=args.emit_json)
+    suites["population"] = functools.partial(bench_population.main,
+                                             emit_json=args.emit_json)
     t0 = time.time()
     for name in names:
         suites[name]()

@@ -37,6 +37,12 @@ class BHFLSetting:
     lm_edge: float = 0.05           # E[LM'] edge<->leader one-way
     link_latency: float = 0.05      # Raft edge<->edge message (s)
     consensus_mult: float = 1.0     # scales the drawn per-round L_bc
+    # --- delayed-gradient aggregation (aggregator="delayed_grad"; see
+    # core.baselines.delayed_grad).  Data-batched sweep fields like the
+    # latency constants: a staleness-discount grid is one compiled call.
+    staleness_discount: float = 0.9  # beta — stale update weight beta**k'
+    delay_delta: int = 1            # max consecutive-miss staleness; k' >
+    #   delta drops the slot from the round's aggregate entirely
 
 
 DEFAULT = BHFLSetting()

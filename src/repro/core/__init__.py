@@ -2,7 +2,8 @@
 from .hieavg import (History, init_history, update_history, edge_aggregate,
                      global_aggregate, edge_aggregate_cold,
                      global_aggregate_cold)
-from .baselines import fedavg, t_fedavg, d_fedavg
+from .baselines import fedavg, t_fedavg, d_fedavg, delayed_grad
+from .rng import STREAMS, stream_rng, stream_seed, stream_seq
 from .straggler import no_stragglers, permanent, temporary, from_fraction
 from .blockchain import (Block, RaftChain, RaftParams,
                          expected_consensus_latency,
@@ -16,7 +17,8 @@ from .convergence import BoundParams, omega_bound, omega_bound_k
 __all__ = [
     "History", "init_history", "update_history", "edge_aggregate",
     "global_aggregate", "edge_aggregate_cold", "global_aggregate_cold",
-    "fedavg", "t_fedavg", "d_fedavg",
+    "fedavg", "t_fedavg", "d_fedavg", "delayed_grad",
+    "STREAMS", "stream_rng", "stream_seed", "stream_seq",
     "no_stragglers", "permanent", "temporary", "from_fraction",
     "Block", "RaftChain", "RaftParams",
     "expected_consensus_latency", "expected_election_latency",

@@ -5,9 +5,14 @@
   * ``t_fedavg`` — only timely submissions are averaged (stragglers dropped).
   * ``d_fedavg`` — stragglers represented by their last submitted weights,
                    verbatim (no delta extrapolation, no decay).
+  * ``delayed_grad`` — stragglers' round-t updates arrive one round late and
+                   are mixed in with a staleness-discounted weight
+                   ("Stragglers Are Not Disaster", arXiv:2102.06329,
+                   adapted to the weight-averaging convention here).
 
 All share HieAvg's stacked-pytree convention so the simulator can swap them.
-``d_fedavg`` keeps a plain last-weights store (reusing ``History.prev_w``).
+``d_fedavg`` keeps a plain last-weights store (reusing ``History.prev_w``);
+``delayed_grad`` keeps a (pending weights, staleness age) pair.
 """
 from __future__ import annotations
 
@@ -66,3 +71,49 @@ def d_fedavg(stacked_w: PyTree, mask: jnp.ndarray, last_w: PyTree,
     filled = jax.tree.map(fill, stacked_w, last_w)
     new_last = filled  # present -> current weights; absent -> unchanged
     return _weighted_mean(filled, part_weights), new_last
+
+
+@jax.jit
+def delayed_grad(stacked_w: PyTree, mask: jnp.ndarray, pending: PyTree,
+                 age: jnp.ndarray, beta, delta,
+                 part_weights: Optional[jnp.ndarray] = None
+                 ) -> tuple[PyTree, PyTree, jnp.ndarray]:
+    """Delayed-gradient aggregation with staleness-discounted weights.
+
+    Per "Stragglers Are Not Disaster" (arXiv:2102.06329), adapted to this
+    repo's weight-averaging convention: a straggler's round-t update is
+    not dropped — it arrives one aggregation round late (``pending`` holds
+    the last update that DID arrive) and is mixed in with the discounted
+    coefficient ``beta ** k'``, where ``k'`` is the number of consecutive
+    missed rounds including this one (``k' = age + 1``; ``age`` counts
+    prior consecutive misses).  Slots stale past ``delta`` consecutive
+    rounds (``k' > delta``) are dropped entirely (coefficient 0).
+
+    The aggregate renormalizes over the effective coefficients
+    (``_weighted_mean``), matching the other baselines here.
+
+    Returns ``(aggregate, new_pending, new_age)``:
+      * ``new_pending = stacked_w`` — every participant's current update is
+        in flight and arrives by the next aggregation round (present
+        participants' updates arrived *now*, which is the same store);
+      * ``new_age`` — 0 where present, ``age + 1`` where missing.
+
+    ``beta``/``delta`` may be traced scalars (they are batched sweep
+    fields in the engine).  First-round semantics (treat everyone as
+    present — there is nothing to be stale against) are the caller's job,
+    exactly like ``d_fedavg``.
+    """
+    m = mask.astype(jnp.float32)
+    if part_weights is None:
+        part_weights = jnp.ones_like(m)
+    k_prime = age + 1.0
+    stale_c = (beta ** k_prime) * (k_prime <= delta).astype(jnp.float32)
+    coef = part_weights * (m + (1.0 - m) * stale_c)
+
+    def fill(w, p):
+        mb = _bshape(m, w)
+        return mb * w + (1.0 - mb) * p
+
+    filled = jax.tree.map(fill, stacked_w, pending)
+    new_age = (age + 1.0) * (1.0 - m)
+    return _weighted_mean(filled, coef), stacked_w, new_age

@@ -1,4 +1,6 @@
 from .synthetic import class_images, lm_tokens
-from .partition import by_class, dirichlet
+from .partition import (by_class, class_pools, dirichlet, population_classes,
+                        sample_class_batches)
 
-__all__ = ["class_images", "lm_tokens", "by_class", "dirichlet"]
+__all__ = ["class_images", "lm_tokens", "by_class", "dirichlet",
+           "population_classes", "class_pools", "sample_class_batches"]

@@ -5,10 +5,80 @@ owns at most ``max_classes`` image classes ("non_IID_1" = 1 class/device).
 ``dirichlet`` is the standard LDA partitioner for ablations.  Both return a
 list-of-index-arrays per (edge, device) so edges can have inconsistent J_i
 (Fig. 4b).
+
+Population-scale variants (PR 6) back ``repro.fl.population``: with a
+device *population* far larger than the per-round cohort, materializing one
+index array per device is O(population) memory for nothing.  Instead,
+
+  * ``population_classes`` assigns classes to all P devices as one
+    vectorized round-robin (same rule as ``by_class``: device ``d`` owns
+    ``order[(d * max_classes + m) % n_classes]``) — P × max_classes i32,
+    the only O(population) array the store keeps;
+  * ``class_pools`` indexes the train split once into per-class pools;
+  * ``sample_class_batches`` draws SGD batches for a *cohort* of devices
+    directly from their classes' pools — O(cohort × steps × batch) work
+    regardless of population size.
+
+Unlike ``by_class`` (disjoint per-class slices), population shards are the
+class pools themselves: two devices owning the same class sample from the
+same pool (overlapping shards) — the standard cross-device regime where
+per-round cohorts resample the population anyway.
 """
 from __future__ import annotations
 
 import numpy as np
+
+
+def population_classes(population: int, n_classes: int, max_classes: int = 1,
+                       seed=0) -> np.ndarray:
+    """Vectorized round-robin class assignment for a device population.
+
+    Returns ``[population, max_classes]`` i32 — the same assignment rule as
+    ``by_class`` (a seed-shuffled class order walked round-robin so every
+    class is covered), computed without per-device Python loops.  ``seed``
+    may be an int or a ``SeedSequence``.
+    """
+    rng = np.random.default_rng(seed)
+    order = rng.permutation(n_classes)
+    d = np.arange(population, dtype=np.int64)[:, None]
+    m = np.arange(max_classes, dtype=np.int64)[None, :]
+    return order[(d * max_classes + m) % n_classes].astype(np.int32)
+
+
+def class_pools(labels: np.ndarray
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Index ``labels`` into per-class sample pools, once.
+
+    Returns ``(pool, offsets, counts)``: ``pool`` is a flat i32 array of
+    sample indices sorted by class, class ``c`` owning the slice
+    ``pool[offsets[c] : offsets[c] + counts[c]]``.
+    """
+    labels = np.asarray(labels)
+    n_classes = int(labels.max()) + 1
+    pool = np.argsort(labels, kind="stable").astype(np.int32)
+    counts = np.bincount(labels, minlength=n_classes).astype(np.int64)
+    offsets = np.concatenate([[0], np.cumsum(counts)[:-1]]).astype(np.int64)
+    return pool, offsets, counts
+
+
+def sample_class_batches(pool: np.ndarray, offsets: np.ndarray,
+                         counts: np.ndarray, device_classes: np.ndarray,
+                         steps: int, batch: int,
+                         rng: np.random.Generator) -> np.ndarray:
+    """Sample ``[D, steps, batch]`` train indices for a device cohort.
+
+    ``device_classes``: ``[D, M]`` class assignment rows (from
+    ``population_classes``, gathered for the cohort occupants).  Each draw
+    first picks one of the device's M classes uniformly, then a uniform
+    sample (with replacement) from that class's pool — one vectorized pass,
+    no per-device loop.  Classes must be non-empty (``counts > 0``); the
+    population store validates that once at construction.
+    """
+    D, M = device_classes.shape
+    ci = rng.integers(0, M, size=(D, steps, batch))
+    cls = device_classes[np.arange(D)[:, None, None], ci]
+    draw = rng.integers(0, np.maximum(counts[cls], 1))
+    return pool[offsets[cls] + draw].astype(np.int32)
 
 
 def by_class(labels: np.ndarray, n_edges: int, j_per_edge: list[int],

@@ -1,9 +1,11 @@
 from .engine import EngineInputs, build_inputs, run_engine
+from .population import DevicePopulation, PopulationSpec
 from .simulator import BHFLSimulator, RunResult, run_comparison
 from .sweep import (SweepBucket, SweepPlan, SweepResult, execute_plan,
                     plan_sweep, run_plan, run_sweep)
 
 __all__ = ["BHFLSimulator", "RunResult", "run_comparison",
            "EngineInputs", "build_inputs", "run_engine",
+           "DevicePopulation", "PopulationSpec",
            "SweepBucket", "SweepPlan", "SweepResult", "execute_plan",
            "plan_sweep", "run_plan", "run_sweep"]

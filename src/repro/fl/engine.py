@@ -61,7 +61,9 @@ import numpy as np
 
 from repro.core import baselines, hieavg
 from repro.core import latency as lat
+from repro.core import rng as rng_streams
 from repro.core import straggler as strag
+from repro.data import partition
 from repro.kernels import dispatch as kernel_dispatch
 from repro.models import (cnn_accuracy_fast, cnn_loss, cnn_loss_fast,
                           init_from_specs)
@@ -175,10 +177,29 @@ class EngineInputs:
     # --- latency plane (PR 3): precomputed per-round time draws feeding
     # the engine's simulated clock.  Padded slots/rounds are zero.
     dev_time: jnp.ndarray     # [T, K, N, J] f32 — per-device round time
-    #   (2*LM + LP draws, straggler submissions delayed + deadline-capped)
+    #   (2*LM + LP draws, straggler submissions delayed + deadline-capped;
+    #   population mode folds the occupant's speed profile in)
     cons_time: jnp.ndarray    # [T] f32 — per-round consensus latency L_bc
     #   (replayed RaftChain election + commit, scaled by consensus_mult)
     edge_hop: jnp.ndarray     # scalar f32 — 2 * E[LM'] edge<->leader hop
+    # --- population/cohort plane (PR 6): the engine's per-round arrays are
+    # already COHORT-sized ([N, J] = the gathered cohort, not the
+    # population) — the only trace the population leaves here is churn:
+    cohort_change: jnp.ndarray  # [T, N, J] bool — slot occupant changed at
+    #   the start of global round t (all-False for fixed membership).
+    #   Resets the delayed-gradient pending/age state of the slot; HieAvg
+    #   histories are slot-stream-keyed under churn (documented in
+    #   docs/ARCHITECTURE.md).
+    # --- aggregation-mode plane (PR 6): traced per-point scalars so an
+    # aggregation-strategy axis is sweep DATA, not a recompile.  Only the
+    # static aggregator="switched" engine reads agg_sel; stale_beta/
+    # delay_delta feed delayed_grad (direct or switched).
+    agg_sel: jnp.ndarray      # scalar i32 — 0 hieavg, 1 delayed_grad,
+    #   2 fedavg (see AGG_SEL)
+    stale_beta: jnp.ndarray   # scalar f32 — delayed-grad staleness
+    #   discount beta (setting.staleness_discount)
+    delay_delta: jnp.ndarray  # scalar f32 — max tolerated consecutive-miss
+    #   staleness delta (setting.delay_delta)
 
 
 #: ``EngineInputs`` fields that form the seed-major data plane: a pure
@@ -190,6 +211,10 @@ class EngineInputs:
 #: to XLA for reuse would invalidate the other aliases.
 SHARED_DATA_FIELDS = frozenset({"train_x", "train_y", "test_x", "test_y",
                                 "init_w"})
+
+#: ``agg_sel`` encoding for the ``"switched"`` engine — the aggregation
+#: strategies that can share one compiled program as a traced axis.
+AGG_SEL = {"hieavg": 0, "delayed_grad": 1, "fedavg": 2}
 
 
 def split_inputs(inp: EngineInputs, *, shared_seed_idx: bool = False
@@ -305,27 +330,48 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
     edge_masks = np.zeros((Tm, Nm), dtype=bool)
     edge_masks[:T, :N] = np.asarray(sim.edge_masks[:T], dtype=bool)
 
-    # batch indices in legacy order: per edge-round, per device
-    rng = np.random.default_rng(sim.seed)
+    # batch indices in legacy order: per edge-round, per device.  The
+    # fresh generator rides the deployment's "batches" SeedSequence stream
+    # (core.rng) — the same stream run_legacy opens per run, so a legacy
+    # and an engine run of one instance see identical batches.
+    rng = rng_streams.stream_rng(sim.seed, "batches")
     R = T * K
-    flat_idx = np.zeros((R, sim.D, steps, bs), np.int32)
-    flat_has = np.zeros((sim.D,), np.float32)
-    for r in range(R):
-        for d, idx in enumerate(sim.device_idx):
-            if len(idx) == 0:
-                continue
-            flat_idx[r, d] = rng.choice(idx, size=(steps, bs), replace=True)
-            flat_has[d] = 1.0
+    if getattr(sim, "pop", None) is not None:
+        # population mode: one vectorized draw for all (round, slot)
+        # pairs — the occupant's classes select the sample pools, the
+        # draws are slot-keyed.  O(R x cohort), never O(population).
+        ids_r = np.repeat(sim.cohort_ids, K, axis=0).reshape(R, sim.D)
+        cls_rd = sim.pop.classes[ids_r.reshape(-1)]      # [R*D, M]
+        flat_idx = partition.sample_class_batches(
+            sim._pool, sim._pool_off, sim._pool_cnt, cls_rd, steps, bs,
+            rng).reshape(R, sim.D, steps, bs)
+        flat_has = np.ones((sim.D,), np.float32)
+    else:
+        flat_idx = np.zeros((R, sim.D, steps, bs), np.int32)
+        flat_has = np.zeros((sim.D,), np.float32)
+        for r in range(R):
+            for d, idx in enumerate(sim.device_idx):
+                if len(idx) == 0:
+                    continue
+                flat_idx[r, d] = rng.choice(idx, size=(steps, bs),
+                                            replace=True)
+                flat_has[d] = 1.0
     # per-device round-time draws (latency fabric).  A separate RNG stream
     # from the batch sampler above: adding latency accounting must not
     # perturb batch draws (legacy parity).  Draws cover only the REAL
     # (T, K, D) extents so a point padded to larger grid maxima sees
-    # byte-identical times (padding stays a numeric no-op).
+    # byte-identical times (padding stays a numeric no-op).  Population
+    # mode scales each slot's draw by the round occupant's speed profile.
     lp = sim.lat
-    lrng = np.random.default_rng([sim.seed, 0x1A7E])
+    lrng = rng_streams.stream_rng(sim.seed, "latency")
     jm = lrng.uniform(1.0 - lp.lm_jitter, 1.0 + lp.lm_jitter, (R, sim.D))
     jp = lrng.uniform(1.0 - lp.lp_jitter, 1.0 + lp.lp_jitter, (R, sim.D))
-    draw = (2.0 * lp.lm_device * jm + lp.lp_device * jp).reshape(T, K, sim.D)
+    draw = 2.0 * lp.lm_device * jm + lp.lp_device * jp
+    spd = sim.cohort_time_scale() if getattr(sim, "pop", None) is not None \
+        else None
+    if spd is not None:
+        draw = draw * spd
+    draw = draw.reshape(T, K, sim.D)
     deadline = lat.device_deadline(lp)
     sub = dense_dev[:R].reshape(T, K, Nm, J)    # real submission masks
 
@@ -353,6 +399,13 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
         paper_lr(jnp.arange(R), s.lr0, s.lr_decay)).reshape(T, K)
     j_arr = np.zeros((Nm,), np.float32)
     j_arr[:N] = sim.j_per_edge
+
+    # cohort churn (population mode: occupant changed at round start;
+    # all-False for fixed membership) — padded rounds/edges stay False
+    cohort_change = np.zeros((Tm, Nm, J), dtype=bool)
+    if hasattr(sim, "cohort_change"):
+        chg = sim.cohort_change()
+        cohort_change[:T, :N, :chg.shape[2]] = chg
 
     if share_data_from is not None:
         src = share_data_from
@@ -382,7 +435,11 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
         t_valid=jnp.int32(T), k_valid=jnp.int32(K),
         n_valid=jnp.int32(N), s_valid=jnp.int32(steps),
         dev_time=jnp.asarray(dev_time), cons_time=jnp.asarray(cons_time),
-        edge_hop=jnp.float32(2.0 * lp.lm_edge))
+        edge_hop=jnp.float32(2.0 * lp.lm_edge),
+        cohort_change=jnp.asarray(cohort_change),
+        agg_sel=jnp.int32(AGG_SEL.get(sim.aggregator, 0)),
+        stale_beta=jnp.float32(s.staleness_discount),
+        delay_delta=jnp.float32(s.delay_delta))
 
 
 # ------------------------------------------------------------- jitted run
@@ -428,6 +485,16 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
     (EXPERIMENTS.md X1): bf16 cuts the two-model-copies-per-layer memory
     cost 2× for free, f8 4× at an accuracy cost; estimation math stays f32.
 
+    ``aggregator`` is static: ``"hieavg"``/``"t_fedavg"``/``"d_fedavg"``/
+    ``"delayed_grad"``/``"fedavg"`` trace only their own branch;
+    ``"switched"`` traces hieavg, delayed_grad, AND fedavg and picks per
+    run by the *traced* ``inp.agg_sel`` scalar — the sweep fabric's
+    mixed-aggregation grids batch into one compiled program that way
+    (the unselected strategies are the batching cost).  Delayed-gradient
+    state (pending stores + consecutive-miss ages, both layers) rides the
+    scan carry; ``inp.cohort_change`` resets a slot's pending/age when
+    population-mode churn hands the slot to a new occupant.
+
     ``kernel_mode`` routes the hot path — the warm HieAvg edge/global
     aggregations and the train-step SGD update — through the kernel plane
     (``repro.kernels.dispatch``): ``"auto"`` resolves to the fused Pallas
@@ -449,6 +516,17 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
         """Gate a carry update on a traced bool (padding = carry-through)."""
         return jax.tree.map(lambda a, b: jnp.where(ok, a, b), new, old)
 
+    def sel3(sel, a, b, c):
+        """Tri-select pytrees by the traced ``agg_sel`` scalar (the
+        "switched" engine: 0 = hieavg, 1 = delayed_grad, 2 = fedavg)."""
+        return jax.tree.map(
+            lambda x, y, z: jnp.where(sel == 0, x, jnp.where(sel == 1, y, z)),
+            a, b, c)
+
+    def bleaf(m, x):
+        """Broadcast a ``[N, J]`` slot mask against a ``[N, J, ...]`` leaf."""
+        return m.reshape(m.shape + (1,) * (x.ndim - 2))
+
     def bcast_edges(tree):   # [...] global -> [N, ...]
         return jax.tree.map(
             lambda x: jnp.broadcast_to(x, (N,) + x.shape), tree)
@@ -466,13 +544,14 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
 
     def global_round(carry, xs):
         prev_carry = carry
-        device_w, ehist, elast, ghist, glast, prev_global, clock = carry
-        t, bidx_t, dmask_t, emask, lr_t, dtime_t, cons_t = xs
+        (device_w, ehist, elast, ghist, glast, prev_global, clock,
+         eage, gage) = carry
+        t, bidx_t, dmask_t, emask, lr_t, dtime_t, cons_t, chg_t = xs
 
         # ---- K edge rounds: local epoch + per-edge aggregation + sync
         def edge_round(c, xs_k):
             prev_c = c
-            device_w, ehist, elast = c
+            device_w, ehist, elast, eage = c
             # [N,J,steps,B], [N,J], scalar lr, round counter r, k index,
             # per-device time draws [N,J]
             bidx, dmask, lr, r, k, dtime = xs_k
@@ -488,7 +567,7 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
             ws = unflat(pflat)
             dev_loss = loss.reshape(N, J)
 
-            if aggregator == "hieavg":
+            if aggregator in ("hieavg", "switched"):
                 ehist = jax.lax.cond(
                     r == 0,
                     lambda h: hieavg.init_history_batched(ws, history_dtype),
@@ -503,8 +582,27 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
                         w, m, h, inp.valid, inp.gamma0, inp.lam, normalize,
                         mode=kernel_mode)
 
-                edge_models, ehist = jax.lax.cond(
+                agg_h, ehist = jax.lax.cond(
                     t <= inp.t_cold_boot, cold, warm, ws, dmask, ehist)
+            if aggregator in ("delayed_grad", "switched"):
+                # first edge round: everyone counts present (nothing in
+                # flight); cohort churn resets the slot's pending/age at
+                # the round's first edge round
+                m_eff = jnp.logical_or(dmask, r == 0)
+                chg = jnp.logical_and(chg_t, k == 0)
+                pend = jax.tree.map(
+                    lambda p, w: jnp.where(bleaf(chg, w), w, p), elast, ws)
+                age = eage * (1.0 - chg.astype(jnp.float32))
+                agg_d, elast, eage = jax.vmap(
+                    baselines.delayed_grad,
+                    in_axes=(0, 0, 0, 0, None, None, 0))(
+                    ws, m_eff, pend, age, inp.stale_beta, inp.delay_delta,
+                    v32)
+
+            if aggregator == "hieavg":
+                edge_models = agg_h
+            elif aggregator == "delayed_grad":
+                edge_models = agg_d
             elif aggregator == "t_fedavg":
                 edge_models = jax.vmap(baselines.t_fedavg)(ws, dmask, v32)
             elif aggregator == "d_fedavg":
@@ -513,10 +611,16 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
                     ws, m_eff, elast, v32)
             elif aggregator == "fedavg":
                 edge_models = jax.vmap(baselines.fedavg)(ws, v32)
+            elif aggregator == "switched":
+                # all three strategies are computed; the traced per-point
+                # agg_sel picks one — an aggregation-mode grid batches
+                # into one padded shard_map call like any data field
+                edge_models = sel3(inp.agg_sel, agg_h, agg_d,
+                                   jax.vmap(baselines.fedavg)(ws, v32))
             else:
                 raise ValueError(f"unknown aggregator {aggregator!r}")
 
-            new_c = (bcast_devices(edge_models), ehist, elast)
+            new_c = (bcast_devices(edge_models), ehist, elast, eage)
             # per-edge elapsed: the slowest valid device closes the round
             # (padded slots carry dev_time 0; padded edge rounds count 0)
             el = jnp.max(jnp.where(inp.valid, dtime, 0.0), axis=1)
@@ -526,14 +630,14 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
 
         ks = jnp.arange(K)
         rs = (t - 1) * K + ks
-        (device_w, ehist, elast), (dev_losses, edge_els) = jax.lax.scan(
-            edge_round, (device_w, ehist, elast),
+        (device_w, ehist, elast, eage), (dev_losses, edge_els) = jax.lax.scan(
+            edge_round, (device_w, ehist, elast, eage),
             (bidx_t, dmask_t, lr_t, rs, ks, dtime_t))
         # after the sync every device slot holds its edge model
         edge_models = jax.tree.map(lambda x: x[:, 0], device_w)
 
         # ---- global aggregation on the (replayed) leader
-        if aggregator == "hieavg":
+        if aggregator in ("hieavg", "switched"):
             ghist = jax.lax.cond(
                 t == 1,
                 lambda h: hieavg.init_history(edge_models, history_dtype),
@@ -549,14 +653,28 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
                     w, m, h, pw, inp.gamma0, inp.lam, normalize,
                     mode=kernel_mode)
 
-            global_w, ghist = jax.lax.cond(
+            gagg_h, ghist = jax.lax.cond(
                 t <= inp.t_cold_boot, coldg, warmg, edge_models, emask, ghist)
+        if aggregator in ("delayed_grad", "switched"):
+            # edges are fixed infrastructure — no churn reset at this layer
+            m_eff = jnp.logical_or(emask, t == 1)
+            gagg_d, glast, gage = baselines.delayed_grad(
+                edge_models, m_eff, glast, gage, inp.stale_beta,
+                inp.delay_delta, inp.j_arr)
+
+        if aggregator == "hieavg":
+            global_w = gagg_h
+        elif aggregator == "delayed_grad":
+            global_w = gagg_d
         elif aggregator == "t_fedavg":
             global_w = baselines.t_fedavg(edge_models, emask, inp.j_arr)
         elif aggregator == "d_fedavg":
             m_eff = jnp.logical_or(emask, t == 1)
             global_w, glast = baselines.d_fedavg(
                 edge_models, m_eff, glast, inp.j_arr)
+        elif aggregator == "switched":
+            global_w = sel3(inp.agg_sel, gagg_h, gagg_d,
+                            baselines.fedavg(edge_models, inp.j_arr))
         else:
             global_w = baselines.fedavg(edge_models, inp.j_arr)
 
@@ -588,7 +706,8 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
         # repeat the final valid global model/clock with zeroed loss/delta
         t_ok = t <= inp.t_valid
         out_carry = passthru(t_ok, (device_w, ehist, elast, ghist, glast,
-                                    global_w, clock + round_time),
+                                    global_w, clock + round_time,
+                                    eage, gage),
                              prev_carry)
         return out_carry, (out_carry[5], jnp.where(t_ok, loss, 0.0),
                            jnp.where(t_ok, delta, 0.0), out_carry[6])
@@ -600,13 +719,17 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
     dev0 = bcast_devices(edge0)
     carry0 = (dev0,
               hieavg.init_history_batched(dev0, history_dtype),  # @r==0
-              jax.tree.map(jnp.zeros_like, dev0),      # d_fedavg last stores
+              jax.tree.map(jnp.zeros_like, dev0),      # d_fedavg last /
+              #   delayed_grad pending stores (mutually exclusive users)
               hieavg.init_history(edge0, history_dtype),         # @t==1
               jax.tree.map(jnp.zeros_like, edge0),
               init_w,
-              jnp.float32(0.0))                        # simulated clock
+              jnp.float32(0.0),                        # simulated clock
+              jnp.zeros((N, J), jnp.float32),   # delayed-grad edge ages
+              jnp.zeros((N,), jnp.float32))     # delayed-grad global ages
     xs = (jnp.arange(1, T + 1), inp.batch_idx, inp.dev_masks,
-          inp.edge_masks, inp.lr, inp.dev_time, inp.cons_time)
+          inp.edge_masks, inp.lr, inp.dev_time, inp.cons_time,
+          inp.cohort_change)
     _, (globals_per_round, losses, deltas, clocks) = jax.lax.scan(
         global_round, carry0, xs)
     # test-set eval over the T round snapshots, outside the training scan.

@@ -13,8 +13,9 @@ non-IID class-partitioned dataset, with the full BHFL workflow:
 Straggler schedules (permanent / temporary, per layer) drive boolean masks;
 the aggregator sees only the masks, exactly like a real deadline-based
 system.  Aggregators: ``hieavg`` (the paper), ``t_fedavg`` (drop),
-``d_fedavg`` (reuse last), ``fedavg`` (oracle; meaningful with no-straggler
-schedules).
+``d_fedavg`` (reuse last), ``delayed_grad`` (stale updates arrive one round
+late with staleness-discounted weights, arXiv:2102.06329), ``fedavg``
+(oracle; meaningful with no-straggler schedules).
 
 All devices are simulated in one jitted vmap over the stacked device
 dimension, so a full Fig. 2 run takes seconds on CPU.
@@ -37,13 +38,15 @@ import numpy as np
 
 from repro.configs.bhfl_cnn import BHFLSetting
 from repro.core import (RaftChain, RaftParams, baselines, hieavg,
-                        latency as lat, straggler as strag)
+                        latency as lat, rng as rng_streams,
+                        straggler as strag)
 from repro.kernels import dispatch as _kdispatch
-from repro.data import by_class, class_images
+from repro.data import by_class, class_images, class_pools
 from repro.models import cnn_accuracy, cnn_specs, init_from_specs
 from repro.optim import paper_lr
 
 from . import engine as _engine
+from . import population as _population
 
 PyTree = Any
 
@@ -94,7 +97,9 @@ class BHFLSimulator:
                  fail_leader_at: Optional[int] = None,
                  seed: Optional[int] = None,
                  history_dtype=None,
-                 kernel_mode: str = "auto"):
+                 kernel_mode: str = "auto",
+                 population=None,
+                 j_cohort: Optional[int] = None):
         """``fail_leader_at``: global round at which the current Raft
         leader crashes — the paper's single-point-of-failure scenario.
         The consortium re-elects and training continues (the failed edge
@@ -110,7 +115,18 @@ class BHFLSimulator:
         like ``history_dtype``) — ``"auto"`` runs the fused Pallas
         aggregation/SGD kernels on TPU/GPU and the pure-XLA reference on
         CPU; ``"interpret"``/``"pallas"``/``"xla"`` force a path.  See
-        ``repro.kernels.dispatch``."""
+        ``repro.kernels.dispatch``.
+
+        ``population`` (+ ``j_cohort``): population mode — an int device
+        -population size (with ``j_cohort`` devices gathered per edge per
+        round), a ``fl.population.PopulationSpec``, or a prebuilt
+        ``DevicePopulation`` store (shared across sweep points).  Each
+        global round samples a cohort ``[N, j_cohort]`` from the
+        population by index; straggler propensity, data shard, and speed
+        come from the occupant's profile while all per-round randomness
+        is keyed by slot, so memory and per-round work scale with the
+        cohort, not the population.  Engine path only (``run_legacy``
+        refuses).  See ``repro.fl.population``."""
         self.s = setting
         self.aggregator = aggregator
         self.normalize = normalize
@@ -121,54 +137,94 @@ class BHFLSimulator:
         self.fail_leader_at = fail_leader_at
         self.seed = setting.seed if seed is None else seed
         self.N = setting.n_edges
-        self.j_per_edge = j_per_edge or [setting.j_per_edge] * self.N
+        # ---- population mode: the cohort shape is fixed by the store
+        if population is not None:
+            if j_per_edge is not None:
+                raise ValueError(
+                    "population mode fixes the per-edge device count to "
+                    "j_cohort; pass j_cohort instead of j_per_edge")
+            self.pop = _population.as_population(
+                population, j_cohort, n_classes=setting.n_classes,
+                max_classes=setting.classes_per_device,
+                seed=rng_streams.stream_seed(self.seed, "population"))
+            self.j_per_edge = [self.pop.spec.j_cohort] * self.N
+        else:
+            self.pop = None
+            self.j_per_edge = j_per_edge or [setting.j_per_edge] * self.N
         if len(self.j_per_edge) != self.N:
             raise ValueError(
                 f"j_per_edge has {len(self.j_per_edge)} entries for "
                 f"n_edges={self.N}; a ragged device list must name every "
                 "edge exactly once")
-        self.D = sum(self.j_per_edge)  # total devices
+        self.D = sum(self.j_per_edge)  # total devices (cohort size in
+        #                                population mode)
         # paper semantics: one local iteration = one epoch over the
         # device's own shard — so per-round steps scale inversely with the
         # device count when the total data pool is fixed (Sec. 6.1.5)
         self.steps = steps_per_epoch if steps_per_epoch is not None \
             else max(1, n_train // (self.D * setting.batch_size))
-        self.rng = np.random.default_rng(self.seed)
 
-        # ---- data: synthetic class-clustered images, non-IID partition
-        imgs, labels = class_images(n_train + n_test, seed=self.seed,
-                                    hw=setting.image_hw,
-                                    n_classes=setting.n_classes)
+        # ---- data: synthetic class-clustered images, non-IID partition.
+        # All host-side randomness is drawn from named SeedSequence streams
+        # (core.rng): independent per (seed, stream), collision-free across
+        # adjacent seeds — see tests/test_rng_streams.py.
+        imgs, labels = class_images(
+            n_train + n_test, seed=rng_streams.stream_seed(self.seed, "data"),
+            hw=setting.image_hw, n_classes=setting.n_classes)
         # kept as (read-only) numpy views: the device put happens once in
         # build_inputs / the jitted eval — a sweep planner constructs one
         # simulator per grid point, and P per-instance device copies of
         # the test set would pin memory for nothing
         self.test_x = imgs[n_train:]
         self.test_y = labels[n_train:]
-        parts = by_class(labels[:n_train], self.N, self.j_per_edge,
-                         max_classes=setting.classes_per_device,
-                         seed=self.seed)
-        self.device_idx = [idx for edge in parts for idx in edge]
         self.train_x, self.train_y = imgs[:n_train], labels[:n_train]
+        part_seed = rng_streams.stream_seed(self.seed, "partition")
+        if self.pop is None:
+            parts = by_class(labels[:n_train], self.N, self.j_per_edge,
+                             max_classes=setting.classes_per_device,
+                             seed=part_seed)
+            self.device_idx = [idx for edge in parts for idx in edge]
+        else:
+            # population shards are the per-class pools themselves: the
+            # occupant's classes select pools, batches sample from them
+            # (overlapping shards — see data.partition)
+            self.device_idx = None
+            self._pool, self._pool_off, self._pool_cnt = class_pools(
+                labels[:n_train])
+            used = np.unique(self.pop.classes)
+            if (self._pool_cnt[used] == 0).any():
+                raise ValueError(
+                    "population mode needs every assigned class present in "
+                    "the train split; increase n_train or n_classes")
 
         # ---- straggler schedules (submission masks per round)
         rounds = setting.t_global_rounds * setting.k_edge_rounds + 1
-        n_dev_strag = int(round(setting.straggler_frac * setting.j_per_edge))
-        dev_masks = []
-        for e in range(self.N):
-            kw = dict(stop_round=setting.permanent_stop_round
-                      * setting.k_edge_rounds) \
-                if device_stragglers == "permanent" else {}
-            dev_masks.append(strag.from_fraction(
-                rounds, self.j_per_edge[e],
-                n_dev_strag / max(setting.j_per_edge, 1),
-                kind=device_stragglers, seed=self.seed + 17 * e, **kw))
-        self.dev_masks = dev_masks                      # list of [rounds, J_e]
+        if self.pop is not None:
+            self.cohort_ids, self.dev_masks = self._population_schedules(
+                rounds, device_stragglers)
+        else:
+            self.cohort_ids = None
+            n_dev_strag = int(round(
+                setting.straggler_frac * setting.j_per_edge))
+            dev_masks = []
+            for e in range(self.N):
+                kw = dict(stop_round=setting.permanent_stop_round
+                          * setting.k_edge_rounds) \
+                    if device_stragglers == "permanent" else {}
+                dev_masks.append(strag.from_fraction(
+                    rounds, self.j_per_edge[e],
+                    n_dev_strag / max(setting.j_per_edge, 1),
+                    kind=device_stragglers,
+                    seed=rng_streams.stream_seed(self.seed, "dev_masks", e),
+                    **kw))
+            self.dev_masks = dev_masks                  # list of [rounds, J_e]
         kw = dict(stop_round=setting.permanent_stop_round) \
             if edge_stragglers == "permanent" else {}
         self.edge_masks = strag.from_fraction(
             setting.t_global_rounds + 1, self.N, setting.straggler_frac,
-            kind=edge_stragglers, seed=self.seed + 991, **kw)  # [T+1, N]
+            kind=edge_stragglers,
+            seed=rng_streams.stream_seed(self.seed, "edge_masks"),
+            **kw)  # [T+1, N]
 
         # ---- models
         self.specs = cnn_specs(setting.image_hw, 1, setting.n_classes,
@@ -183,7 +239,67 @@ class BHFLSimulator:
             lm_edge=setting.lm_edge)
         self.chain = RaftChain(
             self.N, RaftParams(link_latency=setting.link_latency),
-            seed=self.seed)
+            seed=rng_streams.stream_seed(self.seed, "chain"))
+
+    # ----------------------------------------------------- population plane
+    def _population_schedules(self, rounds: int, device_stragglers: str
+                              ) -> tuple[np.ndarray, list[np.ndarray]]:
+        """Sample the cohort plan and its slot-keyed straggler masks.
+
+        Returns ``(cohort_ids [T, N, J], dev_masks list of [rounds, J])``.
+        All draws are SLOT-keyed uniforms compared against the occupant's
+        gathered ``miss_prob`` — so a gathered cohort and a materialized
+        ``store.subset`` of the same rows see identical masks (the
+        cohort-gather parity invariant, tests/test_population.py).
+
+        Unlike the fixed-membership ``temporary`` schedule (forced return
+        the round after a miss), population straggling is i.i.d. Bernoulli
+        per round from the occupant's propensity — the fleet-realistic
+        model; cold-boot edge rounds (``t <= t_cold_boot``) are never
+        missed, matching Alg. 1's assumption.
+        """
+        s, N, J = self.s, self.N, self.pop.spec.j_cohort
+        T, K = s.t_global_rounds, s.k_edge_rounds
+        cohort_ids = self.pop.cohort_ids(
+            T, N, rng_streams.stream_seed(self.seed, "cohort"))
+        if device_stragglers not in ("temporary", "none"):
+            raise ValueError(
+                "population mode draws straggling from per-device "
+                "propensity profiles; device_stragglers must be "
+                f"'temporary' or 'none', got {device_stragglers!r}")
+        if device_stragglers == "none":
+            masks = np.ones((rounds, N, J), dtype=bool)
+        else:
+            # occupant of global round t holds its slot for all K edge
+            # rounds; the trailing schedule row reuses the last cohort
+            ids_r = np.repeat(cohort_ids, K, axis=0)
+            ids_r = np.concatenate([ids_r, ids_r[-1:]])[:rounds]
+            u = rng_streams.stream_rng(self.seed, "dev_masks").random(
+                (rounds, N, J))
+            masks = u >= self.pop.miss_prob[ids_r]
+            masks[:s.t_cold_boot * K] = True
+        return cohort_ids, [masks[:, e, :] for e in range(N)]
+
+    def cohort_change(self) -> np.ndarray:
+        """``[T, N, J]`` bool — slot occupant changed at the start of global
+        round t (always False at t=0 and outside population mode).  Feeds
+        the engine's delayed-gradient pending/age reset."""
+        T = self.s.t_global_rounds
+        J = max(self.j_per_edge)
+        if self.cohort_ids is None:
+            return np.zeros((T, self.N, J), dtype=bool)
+        chg = np.zeros((T, self.N, J), dtype=bool)
+        chg[1:] = self.cohort_ids[1:] != self.cohort_ids[:-1]
+        return chg
+
+    def cohort_time_scale(self) -> Optional[np.ndarray]:
+        """``[T*K, D]`` per-round occupant round-time multipliers for the
+        latency fabric (None outside population mode)."""
+        if self.cohort_ids is None:
+            return None
+        K = self.s.k_edge_rounds
+        ids_r = np.repeat(self.cohort_ids, K, axis=0)    # [T*K, N, J]
+        return self.pop.time_scale[ids_r].reshape(ids_r.shape[0], self.D)
 
     # ------------------------------------------------------------- batching
     def _epoch_batches(self, rng) -> tuple[jnp.ndarray, jnp.ndarray]:
@@ -210,9 +326,10 @@ class BHFLSimulator:
 
         Numerically equivalent to ``run_legacy`` (see
         tests/test_engine_parity.py) but executes the whole run as one
-        compiled program.  Uses a fresh batch-RNG seeded with ``self.seed``,
-        so every ``run()`` call on the same instance is identical; the Raft
-        chain, however, advances per call exactly like the legacy loop.
+        compiled program.  Uses a fresh batch-RNG on the deployment's
+        ``"batches"`` stream (``core.rng``), so every ``run()`` call on the
+        same instance is identical; the Raft chain, however, advances per
+        call exactly like the legacy loop.
         """
         t0 = time.time()
         inp = _engine.build_inputs(self)
@@ -238,9 +355,20 @@ class BHFLSimulator:
 
     # ---------------------------------------------------------- legacy run
     def run_legacy(self, progress: bool = False) -> RunResult:
-        """The original per-edge Python loop (numerics reference)."""
+        """The original per-edge Python loop (numerics reference).
+
+        Uses a fresh per-run batch generator on the same ``"batches"``
+        stream as the engine path — repeated or interleaved ``run()`` /
+        ``run_legacy()`` calls on one instance are all batch-identical.
+        (Previously this consumed a shared mutable ``self.rng``, so a
+        second legacy run silently diverged from the first.)
+        """
+        if self.pop is not None:
+            raise ValueError(
+                "population mode runs on the engine path only; use run()")
         s = self.s
         t0 = time.time()
+        batch_rng = rng_streams.stream_rng(self.seed, "batches")
         # device-resident test set for the per-round eval (self.test_x is
         # a numpy view; re-committing it every round would tax the loop)
         test_x, test_y = jnp.asarray(self.test_x), jnp.asarray(self.test_y)
@@ -274,7 +402,7 @@ class BHFLSimulator:
             edge_models = None
             for k in range(1, s.k_edge_rounds + 1):
                 lr = paper_lr(jnp.asarray(round_ctr), s.lr0, s.lr_decay)
-                bx, by = self._epoch_batches(self.rng)
+                bx, by = self._epoch_batches(batch_rng)
                 device_w, dev_loss = _train_epoch(device_w, bx, by, lr)
 
                 # per-edge aggregation with this edge round's masks
@@ -366,6 +494,17 @@ class BHFLSimulator:
                 return agg, hist, last
             agg, last = baselines.d_fedavg(ws, mask, last, part_weights)
             return agg, hist, last
+        if self.aggregator == "delayed_grad":
+            if last is None:
+                # first round: everyone counts present (nothing in flight)
+                last = (jax.tree.map(jnp.zeros_like, ws),
+                        jnp.zeros((n,), jnp.float32))
+                mask = jnp.ones_like(mask)
+            pending, age = last
+            agg, pending, age = baselines.delayed_grad(
+                ws, mask, pending, age, s.staleness_discount,
+                float(s.delay_delta), part_weights)
+            return agg, hist, (pending, age)
         if self.aggregator == "fedavg":
             return baselines.fedavg(ws, part_weights), hist, last
         raise ValueError(f"unknown aggregator {self.aggregator!r}")

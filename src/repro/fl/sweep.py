@@ -69,8 +69,9 @@ import numpy as np
 from jax.sharding import PartitionSpec
 
 from repro.configs.bhfl_cnn import BHFLSetting
-from repro.fl.engine import (SHARED_DATA_FIELDS, EngineInputs, build_inputs,
-                             merge_inputs, run_engine, split_inputs)
+from repro.fl.engine import (AGG_SEL, SHARED_DATA_FIELDS, EngineInputs,
+                             build_inputs, merge_inputs, run_engine,
+                             split_inputs)
 from repro.kernels.dispatch import resolve_kernel_mode
 from repro.launch.mesh import make_sweep_mesh
 from repro.launch.sharding import sweep_data_spec, sweep_spec
@@ -86,7 +87,22 @@ BATCHED_FIELDS = frozenset({
     "straggler_frac", "gamma0", "lam", "t_cold_boot", "classes_per_device",
     "lr0", "lr_decay", "permanent_stop_round", "seed",
     "lm_device", "lp_device", "lm_edge", "link_latency", "consensus_mult",
+    "staleness_discount", "delay_delta",
 })
+
+#: Pseudo-field accepted in override dicts (NOT a ``BHFLSetting`` field):
+#: the per-point aggregation strategy.  A single-valued grid plans as that
+#: aggregator; a mixed grid plans as the engine's traced ``"switched"``
+#: program — HieAvg-vs-delayed-gradient(-vs-FedAvg) is then ONE padded
+#: shard_map call, selected per point by the batched ``agg_sel`` scalar.
+AGGREGATION_FIELD = "aggregation"
+
+#: Aggregators the traced "switched" engine can mix in one program (the
+#: ``engine.AGG_SEL`` encoding); other aggregators are single-valued-only.
+SWITCHABLE_AGGREGATORS = tuple(sorted(AGG_SEL))
+
+_ALL_AGGREGATORS = ("hieavg", "t_fedavg", "d_fedavg", "delayed_grad",
+                    "fedavg")
 
 #: Fields that change array shapes but that the planner absorbs by padding
 #: every point to its shape bucket's maximum.
@@ -105,6 +121,12 @@ def _validate_overrides(overrides: list[dict]) -> None:
     setting_fields = {f.name for f in dataclasses.fields(BHFLSetting)}
     for ov in overrides:
         for name in ov:
+            if name == AGGREGATION_FIELD:
+                if ov[name] not in _ALL_AGGREGATORS:
+                    raise ValueError(
+                        f"run_sweep: unknown aggregation {ov[name]!r}; "
+                        f"known aggregators: {_ALL_AGGREGATORS}")
+                continue
             if name not in setting_fields:
                 raise ValueError(
                     f"run_sweep: {name!r} is not a BHFLSetting field "
@@ -389,6 +411,10 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
     ``history_dtype``): resolved here (``"auto"`` → fused Pallas kernels
     on TPU/GPU, pure-XLA reference on CPU) and baked into the plan so the
     cached runners key on the concrete mode.
+
+    Each override may name its own ``"aggregation"``; see ``run_sweep``.
+    The plan's aggregator is the grid's single value, or ``"switched"``
+    when mixed (mixing a non-``SWITCHABLE_AGGREGATORS`` strategy raises).
     """
     from repro.fl.simulator import BHFLSimulator  # lazy: avoid import cycle
 
@@ -406,9 +432,12 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
             points.extend((ov, seed) for seed in seeds)
 
     sims = []
+    point_aggs = []
     for ov, seed in points:
         ov = dict(ov)
         ov.pop("seed", None)
+        agg = ov.pop(AGGREGATION_FIELD, aggregator)
+        point_aggs.append(agg)
         kw = dict(sim_kw)
         jpe = ov.pop("j_per_edge", None)
         if isinstance(jpe, (list, tuple, np.ndarray)):
@@ -416,9 +445,26 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
         elif jpe is not None:
             ov["j_per_edge"] = int(jpe)
         sims.append(BHFLSimulator(
-            dataclasses.replace(setting, **ov), aggregator,
+            dataclasses.replace(setting, **ov), agg,
             device_stragglers, edge_stragglers, normalize=normalize,
             seed=seed, **kw))
+
+    # A mixed-aggregation grid compiles as the engine's traced "switched"
+    # aggregator: every point's program computes hieavg/delayed_grad/fedavg
+    # and tri-selects by its batched ``agg_sel`` scalar, so the whole grid
+    # stays one padded shard_map call.  Single-aggregator grids keep the
+    # cheaper static dispatch.
+    distinct = sorted(set(point_aggs))
+    if len(distinct) == 1:
+        plan_aggregator = distinct[0]
+    else:
+        bad = [a for a in distinct if a not in SWITCHABLE_AGGREGATORS]
+        if bad:
+            raise ValueError(
+                f"mixed-aggregation sweep includes {bad}, which cannot be "
+                f"traced-switched; switchable: {SWITCHABLE_AGGREGATORS}. "
+                "Run those aggregators as separate sweeps.")
+        plan_aggregator = "switched"
 
     extents = [{"t": s.s.t_global_rounds, "k": s.s.k_edge_rounds,
                 "n": s.N, "j": max(s.j_per_edge), "steps": s.steps}
@@ -472,7 +518,7 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
         grid_max=dict(g["ext"]))
         for g, binputs in built]
     return SweepPlan(points=points, buckets=buckets, grid_max=grid_max,
-                     aggregator=aggregator, normalize=normalize,
+                     aggregator=plan_aggregator, normalize=normalize,
                      history_dtype=history_dtype,
                      kernel_mode=kernel_mode,
                      n_seeds=len(seed_to_idx),
@@ -670,6 +716,12 @@ def run_sweep(setting: BHFLSetting, seeds=(0,), *,
     restores the single global-max call); model/data geometry fields raise
     a ``ValueError`` naming the field.  Multi-seed grids keep one dataset
     copy per *distinct seed* in device memory, not per point.
+
+    An override may also carry the ``"aggregation"`` pseudo-field (not a
+    ``BHFLSetting`` field): the per-point aggregation strategy.  A grid
+    mixing ``SWITCHABLE_AGGREGATORS`` compiles ONE traced-``"switched"``
+    program selected per point by a batched scalar — e.g. HieAvg vs
+    delayed-gradient in a single padded shard_map call.
     """
     plan = plan_sweep(setting, seeds, overrides=overrides,
                       aggregator=aggregator,

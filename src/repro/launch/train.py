@@ -14,6 +14,11 @@ round.  ``fused=False`` keeps the original per-round loop (periodic
 mid-run checkpoints; otherwise identical math — the fused path consumes
 the batch/chain RNG streams in the same order).
 
+``kernel_mode`` is the kernel-plane knob (``repro.kernels.dispatch``):
+``"auto"`` resolves to the Pallas flash-attention kernel on TPU/GPU and
+the XLA einsum path on CPU.  This driver refuses ``"interpret"`` — the
+Pallas interpreter is a test/validation tool, not a production path.
+
   PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \\
       --smoke --steps 20 --batch 4 --seq 64
 """
@@ -28,12 +33,14 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCH_IDS, get_config, get_smoke
-from repro.core import LatencyParams, RaftChain, RaftParams, straggler
+from repro.core import (LatencyParams, RaftChain, RaftParams, straggler,
+                        stream_rng, stream_seed)
 from repro.data import lm_tokens
+from repro.kernels.dispatch import KERNEL_MODES, resolve_kernel_mode
 from repro.launch.inputs import _memory_shape
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.launch.steps import init_fl_histories, make_hfl_train_step
-from repro.models import init_from_specs, param_specs
+from repro.models import attention, init_from_specs, param_specs
 from repro.optim import paper_lr
 
 
@@ -42,7 +49,14 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20, k_edge: int = 2,
         straggler_frac: float = 0.2, gamma0: float = 0.9, lam: float = 0.9,
         normalize: bool = True, ckpt_dir: str | None = None,
         seed: int = 0, progress: bool = True, fused: bool = True,
+        kernel_mode: str = "auto",
         lat_params: LatencyParams | None = None) -> dict:
+    kernel_mode = resolve_kernel_mode(kernel_mode)
+    if kernel_mode == "interpret":
+        raise ValueError(
+            "train.run(kernel_mode='interpret'): the Pallas interpreter is "
+            "a test/validation path, not a training backend — use 'auto', "
+            "'pallas' (TPU/GPU), or 'xla'")
     cfg = get_smoke(arch) if smoke else get_config(arch)
     mesh = make_debug_mesh() if smoke else make_production_mesh()
     e, c = 1 if smoke else 2, n_clients
@@ -56,18 +70,38 @@ def run(arch: str, *, smoke: bool = True, steps: int = 20, k_edge: int = 2,
         cfg, gamma0=gamma0, lam=lam, normalize=normalize,
         mesh=None if smoke else mesh)
 
-    # straggler schedules + Raft chain (the BHFL control plane)
+    # straggler schedules + Raft chain (the BHFL control plane).  Each
+    # consumer gets its own SeedSequence stream (core.rng) — the same
+    # registry the CNN simulator uses, so no two schedules ever collide.
     dev_masks = straggler.from_fraction(steps * k_edge + 1, e * c,
-                                        straggler_frac, seed=seed)
+                                        straggler_frac,
+                                        seed=stream_seed(seed, "dev_masks"))
     edge_masks = straggler.from_fraction(steps + 1, e, straggler_frac,
-                                         seed=seed + 1)
+                                         seed=stream_seed(seed, "edge_masks"))
     lp = lat_params or LatencyParams(T=steps, N=e, J=c)
-    chain = RaftChain(max(e, 1), RaftParams(), seed=seed)
+    chain = RaftChain(max(e, 1), RaftParams(),
+                      seed=stream_seed(seed, "chain"))
 
-    data = lm_tokens(e * c * batch * 4, seq + 1, cfg.vocab, seed=seed)
+    data = lm_tokens(e * c * batch * 4, seq + 1, cfg.vocab,
+                     seed=stream_seed(seed, "data"))
     ms = _memory_shape(cfg)
-    rng = np.random.default_rng(seed)
+    rng = stream_rng(seed, "batches")
 
+    prev_flash = attention.USE_FLASH_KERNEL
+    attention.USE_FLASH_KERNEL = kernel_mode == "pallas"
+    try:
+        return _run_timed(cfg, mesh, step, params, dev_hist, glob_hist,
+                          chain, dev_masks, edge_masks, data, ms, rng, lp,
+                          steps=steps, k_edge=k_edge, e=e, c=c, batch=batch,
+                          seq=seq, progress=progress, fused=fused,
+                          ckpt_dir=ckpt_dir)
+    finally:
+        attention.USE_FLASH_KERNEL = prev_flash
+
+
+def _run_timed(cfg, mesh, step, params, dev_hist, glob_hist, chain,
+               dev_masks, edge_masks, data, ms, rng, lp, *, steps, k_edge,
+               e, c, batch, seq, progress, fused, ckpt_dir) -> dict:
     t0 = time.time()
     if fused:
         out = _run_fused(cfg, mesh, step, params, dev_hist, glob_hist,
@@ -194,10 +228,15 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--kernel-mode", default="auto",
+                    choices=[m for m in KERNEL_MODES if m != "interpret"],
+                    help="kernel-plane backend (auto resolves per device; "
+                         "'interpret' is test-only and refused here)")
     args = ap.parse_args()
     out = run(args.arch, smoke=args.smoke, steps=args.steps,
               k_edge=args.k_edge, n_clients=args.clients, batch=args.batch,
-              seq=args.seq, ckpt_dir=args.ckpt_dir)
+              seq=args.seq, ckpt_dir=args.ckpt_dir,
+              kernel_mode=args.kernel_mode)
     print(f"done: loss {out['losses'][0]:.4f} -> {out['losses'][-1]:.4f}, "
           f"{out['blocks']} blocks, chain_valid={out['chain_valid']}, "
           f"{out['wall']:.1f}s")

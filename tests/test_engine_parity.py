@@ -38,7 +38,8 @@ def _check(a, b):
     assert b.chain_valid and a.chain_valid
 
 
-@pytest.mark.parametrize("agg", ["hieavg", "t_fedavg", "d_fedavg", "fedavg"])
+@pytest.mark.parametrize("agg", ["hieavg", "t_fedavg", "d_fedavg", "fedavg",
+                                 "delayed_grad"])
 def test_parity_all_aggregators(agg):
     strag = "none" if agg == "fedavg" else "temporary"
     _check(*_pair(agg, strag))

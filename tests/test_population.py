@@ -1,0 +1,221 @@
+"""Population-scale cohort sampling + delayed-gradient aggregation.
+
+The load-bearing invariant is **cohort-gather parity**: per-round
+randomness is keyed by device SLOT and the occupant's profile is gathered
+into the slot, so running a gathered cohort out of a large population is
+bitwise-identical to materializing the sampled rows as a small
+fixed-membership population.  That is what licenses the O(cohort) scaling
+claim (BENCH_population.json): the big-population run *is* the small run,
+just addressed by index.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.bhfl_cnn import REDUCED
+from repro.core import baselines
+from repro.fl import BHFLSimulator, run_sweep
+from repro.fl.population import (DevicePopulation, PopulationSpec,
+                                 as_population)
+
+TINY = dataclasses.replace(REDUCED, t_global_rounds=4, n_edges=3,
+                           j_per_edge=3, image_hw=8)
+KW = dict(n_train=300, n_test=100, steps_per_epoch=2)
+POP = 200          # device population; cohort is N x j_cohort = 3 x 3 = 9
+
+
+def _pop_sim(agg="hieavg", population=POP, j_cohort=3, strag="temporary",
+             **kw):
+    return BHFLSimulator(TINY, agg, strag, strag, population=population,
+                         j_cohort=j_cohort, **KW, **kw)
+
+
+# ------------------------------------------------------------ store basics
+def test_store_profiles_shapes_and_ranges():
+    pop = DevicePopulation(PopulationSpec(size=500, j_cohort=3),
+                           n_classes=10, seed=0)
+    assert pop.classes.shape == (500, 1)
+    assert pop.classes.min() >= 0 and pop.classes.max() < 10
+    assert pop.miss_prob.shape == (500,)
+    assert np.all((pop.miss_prob >= 0) & (pop.miss_prob <= 1))
+    # heterogeneous fleet around the spec mean
+    assert abs(pop.miss_prob.mean() - 0.2) < 0.05
+    assert pop.miss_prob.std() > 0.01
+    assert abs(pop.time_scale.mean() - 1.0) < 0.05   # E[time_scale] = 1
+
+
+def test_cohort_ids_policies():
+    pop = DevicePopulation(PopulationSpec(size=100, j_cohort=4,
+                                          resample="round"),
+                           n_classes=10, seed=0)
+    ids = pop.cohort_ids(6, 2, seed=3)
+    assert ids.shape == (6, 2, 4)
+    assert ids.min() >= 0 and ids.max() < 100
+    assert not np.array_equal(ids[0], ids[1])        # fresh per round
+
+    static = DevicePopulation(PopulationSpec(size=100, j_cohort=4,
+                                             resample="static"),
+                              n_classes=10, seed=0)
+    sids = static.cohort_ids(6, 2, seed=3)
+    assert np.array_equal(sids[0], sids[-1])         # one draw, kept
+
+    full = DevicePopulation(PopulationSpec(size=8, j_cohort=4,
+                                           resample="full"),
+                            n_classes=10, seed=0)
+    fids = full.cohort_ids(6, 2, seed=3)
+    np.testing.assert_array_equal(fids[0].ravel(), np.arange(8))
+    with pytest.raises(ValueError, match="population == N"):
+        full.cohort_ids(6, 3, seed=3)                # 8 != 3*4
+
+
+def test_as_population_coercions():
+    with pytest.raises(ValueError, match="j_cohort"):
+        as_population(100, None, n_classes=10, max_classes=1, seed=0)
+    pop = as_population(100, 4, n_classes=10, max_classes=1, seed=0)
+    assert pop.size == 100 and pop.spec.j_cohort == 4
+    with pytest.raises(ValueError, match="conflicts"):
+        as_population(pop, 5, n_classes=10, max_classes=1, seed=0)
+
+
+def test_simulator_rejects_j_per_edge_with_population():
+    with pytest.raises(ValueError, match="j_cohort"):
+        BHFLSimulator(TINY, "hieavg", "temporary", "temporary",
+                      population=POP, j_cohort=3, j_per_edge=[2, 3, 4],
+                      **KW)
+
+
+def test_run_legacy_refuses_population_mode():
+    with pytest.raises(ValueError, match="engine path only"):
+        _pop_sim().run_legacy()
+
+
+# --------------------------------------------------------- gather parity
+def test_cohort_gather_parity_bitwise():
+    """A gathered cohort out of a 200-device population == the materialized
+    subset run as a fixed-membership ("full") population, BITWISE."""
+    spec = PopulationSpec(size=POP, j_cohort=3, resample="static")
+    big = _pop_sim(population=spec)
+    ids = big.cohort_ids[0]                      # static: every round equal
+    small = _pop_sim(population=big.pop.subset(ids))
+    a, b = big.run(), small.run()
+    np.testing.assert_array_equal(a.accuracy, b.accuracy)
+    np.testing.assert_array_equal(a.loss, b.loss)
+    np.testing.assert_array_equal(a.sim_clock, b.sim_clock)
+
+
+def test_population_run_repeatable():
+    r1, r2 = _pop_sim().run(), _pop_sim().run()
+    np.testing.assert_array_equal(r1.accuracy, r2.accuracy)
+    np.testing.assert_array_equal(r1.loss, r2.loss)
+
+
+@pytest.mark.parametrize("agg", ["hieavg", "delayed_grad"])
+def test_population_run_is_finite(agg):
+    r = _pop_sim(agg)
+    out = r.run()
+    assert np.all(np.isfinite(out.accuracy))
+    assert np.all(np.isfinite(out.loss))
+    assert np.all(np.diff(out.sim_clock) > 0)    # clock strictly advances
+
+
+def test_population_scales_only_store():
+    """Growing the population 50x leaves every engine-side shape unchanged
+    (the O(cohort) claim at the shape level)."""
+    small, big = _pop_sim(population=100), _pop_sim(population=5000)
+    assert small.D == big.D == 9
+    assert small.cohort_ids.shape == big.cohort_ids.shape
+    assert [m.shape for m in small.dev_masks] == \
+           [m.shape for m in big.dev_masks]
+
+
+# --------------------------------------------- delayed-gradient semantics
+def test_delayed_grad_staleness_pins():
+    """Unit pins for core.baselines.delayed_grad: a missing slot submits
+    its pending weights discounted by beta**k', and ages out past delta."""
+    w = {"a": jnp.array([[1.0], [3.0]])}
+    pend = {"a": jnp.array([[10.0], [20.0]])}
+    mask = jnp.array([1.0, 0.0])
+    age = jnp.zeros(2)
+
+    agg, new_pend, new_age = baselines.delayed_grad(w, mask, pend, age,
+                                                    0.5, 1.0)
+    # coef = [1, 0.5 * (k'=1 <= delta)] -> (1*1 + 0.5*20) / 1.5
+    np.testing.assert_allclose(np.asarray(agg["a"]), [11.0 / 1.5])
+    np.testing.assert_array_equal(np.asarray(new_pend["a"]),
+                                  np.asarray(w["a"]))
+    np.testing.assert_array_equal(np.asarray(new_age), [0.0, 1.0])
+
+    # second consecutive miss: k' = 2 > delta -> the slot drops entirely
+    agg2, _, age2 = baselines.delayed_grad(w, mask, pend, new_age, 0.5, 1.0)
+    np.testing.assert_allclose(np.asarray(agg2["a"]), [1.0])
+    np.testing.assert_array_equal(np.asarray(age2), [0.0, 2.0])
+
+    # all present: plain weighted mean, ages reset
+    agg3, _, age3 = baselines.delayed_grad(w, jnp.ones(2), pend, new_age,
+                                           0.5, 1.0)
+    np.testing.assert_allclose(np.asarray(agg3["a"]), [2.0])
+    np.testing.assert_array_equal(np.asarray(age3), [0.0, 0.0])
+
+
+def test_delayed_grad_beta_zero_matches_masked_mean():
+    """beta = 0 silences stale submissions: identical to masking."""
+    w = {"a": jnp.array([[2.0], [6.0], [4.0]])}
+    pend = {"a": jnp.array([[9.0], [9.0], [9.0]])}
+    mask = jnp.array([1.0, 0.0, 1.0])
+    agg, _, _ = baselines.delayed_grad(w, mask, pend, jnp.zeros(3), 0.0, 1.0)
+    np.testing.assert_allclose(np.asarray(agg["a"]), [3.0])
+
+
+# --------------------------------------------- mixed-aggregation sweeps
+def test_mixed_aggregation_sweep_matches_single_runs():
+    """HieAvg-vs-delayed-gradient as ONE batched traced-switched call,
+    per-point equal to standalone engine runs (acceptance criterion)."""
+    ovs = [{"aggregation": "hieavg"},
+           {"aggregation": "delayed_grad"},
+           {"aggregation": "delayed_grad", "staleness_discount": 0.5},
+           {"aggregation": "fedavg"}]
+    sw = run_sweep(TINY, seeds=(0,), overrides=ovs, **KW)
+    for p, ov in enumerate(ovs):
+        setting = dataclasses.replace(
+            TINY, **{k: v for k, v in ov.items() if k != "aggregation"})
+        r = BHFLSimulator(setting, ov["aggregation"], "temporary",
+                          "temporary", **KW).run()
+        np.testing.assert_allclose(sw.accuracy[p], r.accuracy, atol=1e-6)
+        np.testing.assert_allclose(sw.loss[p], r.loss, rtol=1e-5, atol=1e-6)
+
+
+def test_population_sweep_matches_single_runs():
+    """Population mode through the sweep fabric: the O(P) store is built
+    once and shared by every grid point; each point still matches its
+    standalone engine run."""
+    pop = DevicePopulation(PopulationSpec(size=POP, j_cohort=3),
+                           n_classes=TINY.n_classes, seed=0)
+    ovs = [{"aggregation": "hieavg"}, {"aggregation": "delayed_grad"}]
+    sw = run_sweep(TINY, seeds=(0,), overrides=ovs, population=pop, **KW)
+    for p, ov in enumerate(ovs):
+        r = _pop_sim(ov["aggregation"], population=pop, j_cohort=None).run()
+        np.testing.assert_allclose(sw.accuracy[p], r.accuracy, atol=1e-6)
+
+
+def test_mixed_sweep_rejects_unswitchable():
+    with pytest.raises(ValueError, match="traced-switched"):
+        run_sweep(TINY, seeds=(0,),
+                  overrides=[{"aggregation": "hieavg"},
+                             {"aggregation": "t_fedavg"}], **KW)
+
+
+def test_sweep_rejects_unknown_aggregation():
+    with pytest.raises(ValueError, match="unknown aggregation"):
+        run_sweep(TINY, seeds=(0,),
+                  overrides=[{"aggregation": "median"}], **KW)
+
+
+def test_single_aggregation_override_keeps_static_dispatch():
+    from repro.fl.sweep import plan_sweep
+    plan = plan_sweep(TINY, seeds=(0,),
+                      overrides=[{"aggregation": "delayed_grad"},
+                                 {"aggregation": "delayed_grad",
+                                  "staleness_discount": 0.5}], **KW)
+    assert plan.aggregator == "delayed_grad"
