@@ -63,6 +63,29 @@ def best_of(fn, reps: int = 3) -> float:
     return best
 
 
+def interleaved_best_of(fns: dict, reps: int = 3) -> dict:
+    """Best-of-``reps`` wall seconds for *competing* variants, interleaved.
+
+    Warm every variant once (jit caches hot), then take ``reps`` passes of
+    the whole variant set — variant A, variant B, ... per pass — so slow
+    drift in box load (thermal, co-tenants) spreads across all variants
+    instead of reading as a variant difference.  This is the methodology
+    for every head-to-head comparison row (legacy vs engine, auto vs xla);
+    ``best_of`` remains for standalone timings.
+
+    Returns ``{name: best_seconds}`` in the input order.
+    """
+    for fn in fns.values():
+        fn()
+    best = {name: float("inf") for name in fns}
+    for _ in range(reps):
+        for name, fn in fns.items():
+            t0 = time.time()
+            fn()
+            best[name] = min(best[name], time.time() - t0)
+    return best
+
+
 class Csv:
     def __init__(self, name: str):
         self.name = name

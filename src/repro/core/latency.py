@@ -89,6 +89,14 @@ class LatencyParams:
     lp_jitter: float = 0.08
     straggler_slowdown: float = 2.5
     deadline_mult: float = 1.5
+    # Optional per-device clock-rate multipliers, shape [D] (D = total
+    # devices): a heterogeneous fleet where device d's round draw is
+    # scaled by ``rate_mult[d]`` every round, instead of iid draws around
+    # the one shared expectation.  ``None`` = homogeneous (the default).
+    # In population mode the per-round occupant's ``time_scale`` plays
+    # this role instead (drawn from the population store per cohort).
+    # The expectation-level model above intentionally ignores it.
+    rate_mult: Optional[np.ndarray] = None
 
 
 def round_time(p: LatencyParams) -> float:

@@ -75,7 +75,7 @@ PyTree = Any
 # --------------------------------------------------------------- local step
 def train_epoch_body(params: PyTree, images: jnp.ndarray,
                      labels: jnp.ndarray, lr: jnp.ndarray,
-                     loss_fn=cnn_loss_fast,
+                     loss_fn=None,
                      step_ok: Optional[jnp.ndarray] = None,
                      kernel_mode: str = "xla") -> tuple[PyTree, jnp.ndarray]:
     """One local epoch for all devices.  params: stacked [D, ...];
@@ -96,9 +96,15 @@ def train_epoch_body(params: PyTree, images: jnp.ndarray,
     ``kernel_mode`` (resolved — ``"pallas"``/``"interpret"``/``"xla"``):
     routes the inner SGD update through ``kernels.dispatch.sgd_update`` —
     the fused one-pass kernel on accelerators, the original ``tree.map``
-    on the XLA path.  The padded-step mask folds into the kernel's scale
-    (0 → exact identity) so padding stays a numeric no-op on every path.
+    on the XLA path — and, when ``loss_fn`` is None (the default), the
+    conv blocks inside the loss through the fused conv kernel
+    (``cnn_loss_fast(kernel_mode=...)``).  An explicit ``loss_fn``
+    (``run_legacy``'s shifted-sum ``cnn_loss``) is used as-is.  The
+    padded-step mask folds into the kernel's scale (0 → exact identity)
+    so padding stays a numeric no-op on every path.
     """
+    if loss_fn is None:
+        loss_fn = partial(cnn_loss_fast, kernel_mode=kernel_mode)
 
     def step(ps, xs):
         if step_ok is None:
@@ -371,6 +377,16 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
         else None
     if spd is not None:
         draw = draw * spd
+    elif lp.rate_mult is not None:
+        # heterogeneous fleet: device d's clock rate scales every one of
+        # its round draws (before straggler slowdown / deadline capping,
+        # exactly like a population occupant's time_scale would)
+        rm = np.asarray(lp.rate_mult, np.float64).reshape(-1)
+        if rm.shape != (sim.D,):
+            raise ValueError(
+                f"LatencyParams.rate_mult must have one entry per device "
+                f"({sim.D}), got shape {rm.shape}")
+        draw = draw * rm[None, :]
     draw = draw.reshape(T, K, sim.D)
     deadline = lat.device_deadline(lp)
     sub = dense_dev[:R].reshape(T, K, Nm, J)    # real submission masks
@@ -495,14 +511,17 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
     scan carry; ``inp.cohort_change`` resets a slot's pending/age when
     population-mode churn hands the slot to a new occupant.
 
-    ``kernel_mode`` routes the hot path — the warm HieAvg edge/global
-    aggregations and the train-step SGD update — through the kernel plane
-    (``repro.kernels.dispatch``): ``"auto"`` resolves to the fused Pallas
-    kernels on TPU/GPU and the pure-XLA reference on CPU (zero overhead);
+    ``kernel_mode`` routes every heavy round phase through the kernel
+    plane (``repro.kernels.dispatch.ROUND_PHASES``): the conv forward/
+    backward inside the train step, the SGD update, the warm HieAvg
+    edge/global aggregations, the cold-boot means, the FedAvg and
+    delayed-gradient aggregates (the "switched" set), and the post-scan
+    eval head.  ``"auto"`` resolves to the fused Pallas kernels on
+    TPU/GPU and the pure-XLA reference on CPU (zero overhead);
     ``"interpret"`` forces the Pallas interpreter (the CPU validation
-    path the parity tests pin); ``"xla"`` forces the reference.  The cold
-    -boot rounds and the non-HieAvg baseline aggregators always use XLA
-    (a handful of cheap rounds / simple means — not the hot path).
+    path the parity tests pin); ``"xla"`` forces the reference.  Only
+    the legacy ``t_fedavg``/``d_fedavg`` baselines and the tiny history
+    bookkeeping stay XLA-always (not on the hot path).
     """
     kernel_mode = kernel_dispatch.resolve_kernel_mode(kernel_mode)
     T, K, N, J = inp.dev_masks.shape
@@ -574,7 +593,8 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
                     lambda h: h, ehist)
 
                 def cold(w, m, h):
-                    return (hieavg.edge_aggregate_cold_batched(w, inp.valid),
+                    return (kernel_dispatch.edge_aggregate_cold_batched(
+                        w, inp.valid, mode=kernel_mode),
                             hieavg.update_history_batched(h, w, m))
 
                 def warm(w, m, h):
@@ -594,7 +614,7 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
                     lambda p, w: jnp.where(bleaf(chg, w), w, p), elast, ws)
                 age = eage * (1.0 - chg.astype(jnp.float32))
                 agg_d, elast, eage = jax.vmap(
-                    baselines.delayed_grad,
+                    partial(kernel_dispatch.delayed_grad, mode=kernel_mode),
                     in_axes=(0, 0, 0, 0, None, None, 0))(
                     ws, m_eff, pend, age, inp.stale_beta, inp.delay_delta,
                     v32)
@@ -610,13 +630,17 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
                 edge_models, elast = jax.vmap(baselines.d_fedavg)(
                     ws, m_eff, elast, v32)
             elif aggregator == "fedavg":
-                edge_models = jax.vmap(baselines.fedavg)(ws, v32)
+                edge_models = jax.vmap(
+                    partial(kernel_dispatch.fedavg, mode=kernel_mode))(
+                    ws, v32)
             elif aggregator == "switched":
                 # all three strategies are computed; the traced per-point
                 # agg_sel picks one — an aggregation-mode grid batches
                 # into one padded shard_map call like any data field
-                edge_models = sel3(inp.agg_sel, agg_h, agg_d,
-                                   jax.vmap(baselines.fedavg)(ws, v32))
+                edge_models = sel3(
+                    inp.agg_sel, agg_h, agg_d,
+                    jax.vmap(partial(kernel_dispatch.fedavg,
+                                     mode=kernel_mode))(ws, v32))
             else:
                 raise ValueError(f"unknown aggregator {aggregator!r}")
 
@@ -645,7 +669,8 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
             pw = inp.j_arr / jnp.sum(inp.j_arr)
 
             def coldg(w, m, h):
-                return (hieavg.global_aggregate_cold(w, inp.j_arr),
+                return (kernel_dispatch.global_aggregate_cold(
+                    w, inp.j_arr, mode=kernel_mode),
                         hieavg.update_history(h, w, m))
 
             def warmg(w, m, h):
@@ -658,9 +683,9 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
         if aggregator in ("delayed_grad", "switched"):
             # edges are fixed infrastructure — no churn reset at this layer
             m_eff = jnp.logical_or(emask, t == 1)
-            gagg_d, glast, gage = baselines.delayed_grad(
+            gagg_d, glast, gage = kernel_dispatch.delayed_grad(
                 edge_models, m_eff, glast, gage, inp.stale_beta,
-                inp.delay_delta, inp.j_arr)
+                inp.delay_delta, inp.j_arr, mode=kernel_mode)
 
         if aggregator == "hieavg":
             global_w = gagg_h
@@ -674,9 +699,11 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
                 edge_models, m_eff, glast, inp.j_arr)
         elif aggregator == "switched":
             global_w = sel3(inp.agg_sel, gagg_h, gagg_d,
-                            baselines.fedavg(edge_models, inp.j_arr))
+                            kernel_dispatch.fedavg(edge_models, inp.j_arr,
+                                                   mode=kernel_mode))
         else:
-            global_w = baselines.fedavg(edge_models, inp.j_arr)
+            global_w = kernel_dispatch.fedavg(edge_models, inp.j_arr,
+                                              mode=kernel_mode)
 
         device_w = bcast_devices(bcast_edges(global_w))
 
@@ -740,7 +767,8 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
     test_x = inp.test_x[inp.seed_idx]
     test_y = inp.test_y[inp.seed_idx]
     accs = jax.lax.map(
-        lambda w: cnn_accuracy_fast(w, test_x, test_y),
+        lambda w: cnn_accuracy_fast(w, test_x, test_y,
+                                    kernel_mode=kernel_mode),
         globals_per_round)
     return accs, losses, deltas, clocks
 

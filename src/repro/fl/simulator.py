@@ -99,7 +99,8 @@ class BHFLSimulator:
                  history_dtype=None,
                  kernel_mode: str = "auto",
                  population=None,
-                 j_cohort: Optional[int] = None):
+                 j_cohort: Optional[int] = None,
+                 device_rates: Optional[list] = None):
         """``fail_leader_at``: global round at which the current Raft
         leader crashes — the paper's single-point-of-failure scenario.
         The consortium re-elects and training continues (the failed edge
@@ -126,7 +127,15 @@ class BHFLSimulator:
         come from the occupant's profile while all per-round randomness
         is keyed by slot, so memory and per-round work scale with the
         cohort, not the population.  Engine path only (``run_legacy``
-        refuses).  See ``repro.fl.population``."""
+        refuses).  See ``repro.fl.population``.
+
+        ``device_rates``: per-device clock-rate multipliers (length =
+        total devices, positive) for a heterogeneous fleet — device d's
+        per-round latency draw is scaled by ``device_rates[d]`` (before
+        straggler slowdown / deadline capping) instead of iid draws
+        around one shared ``LatencyParams``.  Refused in population
+        mode, where the occupant's ``time_scale`` profile already plays
+        this role per cohort."""
         self.s = setting
         self.aggregator = aggregator
         self.normalize = normalize
@@ -232,11 +241,26 @@ class BHFLSimulator:
         # ---- latency fabric: the Sec. 5 model for this deployment plus
         # the Raft chain (link latency from the setting so consensus is a
         # data-batched sweep field)
+        rate_mult = None
+        if device_rates is not None:
+            if self.pop is not None:
+                raise ValueError(
+                    "population mode draws per-device rates from the "
+                    "store's time_scale profiles; device_rates only "
+                    "applies to fixed fleets")
+            rate_mult = np.asarray(device_rates, np.float64).reshape(-1)
+            if rate_mult.shape != (self.D,):
+                raise ValueError(
+                    f"device_rates must name every device once "
+                    f"(D={self.D}), got shape {rate_mult.shape}")
+            if not (rate_mult > 0).all():
+                raise ValueError("device_rates must be positive "
+                                 "multipliers")
         self.lat = lat.LatencyParams(
             T=setting.t_global_rounds, N=self.N,
             J=int(round(float(np.mean(self.j_per_edge)))),
             lm_device=setting.lm_device, lp_device=setting.lp_device,
-            lm_edge=setting.lm_edge)
+            lm_edge=setting.lm_edge, rate_mult=rate_mult)
         self.chain = RaftChain(
             self.N, RaftParams(link_latency=setting.link_latency),
             seed=rng_streams.stream_seed(self.seed, "chain"))

@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
 from typing import Any, Optional
 
@@ -71,8 +72,9 @@ from jax.sharding import PartitionSpec
 from repro.configs.bhfl_cnn import BHFLSetting
 from repro.fl.engine import (AGG_SEL, SHARED_DATA_FIELDS, EngineInputs,
                              build_inputs, merge_inputs, run_engine,
-                             split_inputs)
+                             split_inputs, train_epoch_body)
 from repro.kernels.dispatch import resolve_kernel_mode
+from repro.models import cnn_specs
 from repro.launch.mesh import make_sweep_mesh
 from repro.launch.sharding import sweep_data_spec, sweep_spec
 
@@ -154,12 +156,71 @@ _SHAPE_KEYS = ("t", "k", "n", "j", "steps")
 
 def _vol(ext: dict) -> int:
     """Padded-compute proxy for one point at extents ``ext``: training
-    work scales with rounds x devices x steps = t*k*(n*j)*steps."""
+    work scales with rounds x devices x steps = t*k*(n*j)*steps.
+
+    Still the unit of ``padding_stats()``/``point_volume`` (a pure FLOP
+    account, comparable across plans); the bucketing decisions themselves
+    use measured step times by default (``_measured_cost_fn``).
+    """
     return ext["t"] * ext["k"] * ext["n"] * ext["j"] * ext["steps"]
 
 
+#: Measured wall seconds of one vmapped train step, keyed
+#: (geometry, kernel_mode) -> {stacked device count D -> seconds}.
+#: Module-level so repeated plans (figures re-planning the same grids)
+#: pay each (geometry, D) compile-and-time exactly once per process.
+_STEP_TIME_CACHE: dict[tuple, dict[int, float]] = {}
+
+
+def _measured_step_time(d: int, geom: tuple) -> float:
+    """Measured seconds for ONE train step over ``d`` stacked devices.
+
+    ``geom`` = (image_hw, batch_size, c1, c2, n_classes, kernel_mode) —
+    the grid-constant geometry (``plan_sweep`` rejects grids that vary
+    it).  First query per (geom, d) runs one warm-up call of the
+    engine's actual inner step (``train_epoch_body``: fwd + bwd + SGD
+    update on zero data, through the plan's kernel path) to compile,
+    then times two more and keeps the best; later queries hit the cache.
+
+    The returned cost is forced strictly increasing in ``d`` (running
+    max over cached smaller counts, plus a tiny ``1 + 1e-6·d`` tilt) so
+    a merge envelope never *measures* cheaper than its members — timing
+    noise would otherwise make bucketing non-deterministic.
+    """
+    times = _STEP_TIME_CACHE.setdefault(geom, {})
+    if d not in times:
+        hw, bs, c1, c2, n_classes, kernel_mode = geom
+        specs = cnn_specs(hw, 1, n_classes, c1, c2)
+        params = {k: jnp.zeros((d,) + sp.shape, jnp.float32)
+                  for k, sp in specs.items()}
+        images = jnp.zeros((d, 1, bs, hw, hw, 1), jnp.float32)
+        labels = jnp.zeros((d, 1, bs), jnp.int32)
+        lr = jnp.float32(0.01)
+        fn = jax.jit(functools.partial(train_epoch_body,
+                                       kernel_mode=kernel_mode))
+        jax.block_until_ready(fn(params, images, labels, lr))  # compile
+        best = float("inf")
+        for _ in range(2):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(params, images, labels, lr))
+            best = min(best, time.perf_counter() - t0)
+        times[d] = best
+    mono = max(t for dd, t in times.items() if dd <= d)
+    return mono * (1.0 + 1e-6 * d)
+
+
+def _measured_cost_fn(geom: tuple):
+    """Bucketing cost: rounds x measured per-step seconds at D = n·j."""
+
+    def cost(ext: dict) -> float:
+        return (ext["t"] * ext["k"] * ext["steps"]
+                * _measured_step_time(ext["n"] * ext["j"], geom))
+
+    return cost
+
+
 def _bucket_points(extents: list[dict], max_buckets: int,
-                   bucket_waste: float) -> list[dict]:
+                   bucket_waste: float, cost_fn=_vol) -> list[dict]:
     """Group points into shape buckets under a padding-waste heuristic.
 
     Greedy agglomerative merge: start with one bucket per distinct extent
@@ -168,8 +229,12 @@ def _bucket_points(extents: list[dict], max_buckets: int,
     merge is *forced* while the bucket count exceeds ``max_buckets`` (the
     compiled-program budget) and *voluntary* while total padded compute
     stays within ``bucket_waste`` x the no-padding ideal — fewer compiles
-    for bounded waste.  Returns ``[{"ids": [point indices], "ext": {...}}]``
-    ordered by first point id, ids ascending within each bucket.
+    for bounded waste.  ``cost_fn(ext)`` prices one point padded to
+    ``ext`` — the ``_vol`` proxy, or measured step times
+    (``_measured_cost_fn``, ``plan_sweep``'s default), which only runs
+    its timings when the grid actually has shapes to merge.  Returns
+    ``[{"ids": [point indices], "ext": {...}}]`` ordered by first point
+    id, ids ascending within each bucket.
     """
     if max_buckets < 1:
         raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
@@ -178,31 +243,34 @@ def _bucket_points(extents: list[dict], max_buckets: int,
         by_key.setdefault(tuple(e[k] for k in _SHAPE_KEYS), []).append(i)
     buckets = [{"ids": ids, "ext": dict(zip(_SHAPE_KEYS, key))}
                for key, ids in by_key.items()]
-    ideal = sum(_vol(e) for e in extents)
+    if len(buckets) > 1:                   # uniform grids never pay cost_fn
+        ideal = sum(cost_fn(e) for e in extents)
 
-    def cost(b):
-        return len(b["ids"]) * _vol(b["ext"])
+        def cost(b):
+            return len(b["ids"]) * cost_fn(b["ext"])
 
-    total = sum(cost(b) for b in buckets)
-    while len(buckets) > 1:
-        best = None
-        for x in range(len(buckets)):
-            for y in range(x + 1, len(buckets)):
-                ext = {k: max(buckets[x]["ext"][k], buckets[y]["ext"][k])
-                       for k in _SHAPE_KEYS}
-                delta = ((len(buckets[x]["ids"]) + len(buckets[y]["ids"]))
-                         * _vol(ext) - cost(buckets[x]) - cost(buckets[y]))
-                if best is None or delta < best[0]:
-                    best = (delta, x, y, ext)
-        delta, x, y, ext = best
-        if len(buckets) > max_buckets or total + delta <= bucket_waste * ideal:
-            merged = {"ids": buckets[x]["ids"] + buckets[y]["ids"],
-                      "ext": ext}
-            buckets = [b for i, b in enumerate(buckets)
-                       if i not in (x, y)] + [merged]
-            total += delta
-        else:
-            break
+        total = sum(cost(b) for b in buckets)
+        while len(buckets) > 1:
+            best = None
+            for x in range(len(buckets)):
+                for y in range(x + 1, len(buckets)):
+                    ext = {k: max(buckets[x]["ext"][k], buckets[y]["ext"][k])
+                           for k in _SHAPE_KEYS}
+                    delta = ((len(buckets[x]["ids"])
+                              + len(buckets[y]["ids"])) * cost_fn(ext)
+                             - cost(buckets[x]) - cost(buckets[y]))
+                    if best is None or delta < best[0]:
+                        best = (delta, x, y, ext)
+            delta, x, y, ext = best
+            if (len(buckets) > max_buckets
+                    or total + delta <= bucket_waste * ideal):
+                merged = {"ids": buckets[x]["ids"] + buckets[y]["ids"],
+                          "ext": ext}
+                buckets = [b for i, b in enumerate(buckets)
+                           if i not in (x, y)] + [merged]
+                total += delta
+            else:
+                break
     for b in buckets:
         b["ids"].sort()
     buckets.sort(key=lambda b: b["ids"][0])
@@ -391,6 +459,7 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
                normalize: bool = False, history_dtype=None,
                kernel_mode: str = "auto",
                max_buckets: int = 4, bucket_waste: float = 1.25,
+               bucket_cost: str = "measured",
                **sim_kw) -> SweepPlan:
     """Precompute a grid (overrides x seeds) into bucketed ``EngineInputs``.
 
@@ -399,6 +468,11 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
     shape buckets by the padding-waste heuristic (``bucket_waste`` caps the
     total padded-compute ratio voluntary merges may reach; see
     ``_bucket_points``), and every point is padded to its bucket's maxima.
+    ``bucket_cost`` prices a padded point for those decisions:
+    ``"measured"`` (default) times one real train step per candidate
+    device count through the plan's kernel path (compiled once, cached
+    process-wide, strictly monotone in device count so noise can't flip
+    the plan); ``"proxy"`` keeps the analytic ``t·k·n·j·steps`` volume.
     ``max_buckets=1`` forces the single global-max bucket (the PR 2
     behavior).  ``j_per_edge`` additionally accepts a per-edge list
     (Fig. 4b inconsistent-J deployments).  Geometry fields
@@ -470,7 +544,16 @@ def plan_sweep(setting: BHFLSetting, seeds=(0,), *,
                 "n": s.N, "j": max(s.j_per_edge), "steps": s.steps}
                for s in sims]
     grid_max = {k: max(e[k] for e in extents) for k in _SHAPE_KEYS}
-    groups = _bucket_points(extents, max_buckets, bucket_waste)
+    if bucket_cost not in ("measured", "proxy"):
+        raise ValueError(f"unknown bucket_cost {bucket_cost!r}; "
+                         "expected 'measured' or 'proxy'")
+    if bucket_cost == "measured":
+        s0 = sims[0].s
+        cost_fn = _measured_cost_fn((s0.image_hw, s0.batch_size, s0.cnn_c1,
+                                     s0.cnn_c2, s0.n_classes, kernel_mode))
+    else:
+        cost_fn = _vol
+    groups = _bucket_points(extents, max_buckets, bucket_waste, cost_fn)
 
     # seed-dedup: data/init arrays are a pure function of (seed, geometry),
     # and geometry is grid-constant — the first point of each distinct seed
@@ -703,6 +786,7 @@ def run_sweep(setting: BHFLSetting, seeds=(0,), *,
               kernel_mode: str = "auto",
               mesh=None, placement: str = "auto",
               max_buckets: int = 4, bucket_waste: float = 1.25,
+              bucket_cost: str = "measured",
               **sim_kw) -> SweepResult:
     """Grids (including topology/round grids) as a few compiled sharded
     calls — one per shape bucket.
@@ -712,7 +796,8 @@ def run_sweep(setting: BHFLSetting, seeds=(0,), *,
     length, lr schedule, and seeds vary as pure data; ``n_edges``,
     ``j_per_edge`` (int or per-edge list), ``k_edge_rounds``, and
     ``t_global_rounds`` vary via padding to the bucket max (``max_buckets``
-    / ``bucket_waste`` steer the padding-waste heuristic; ``max_buckets=1``
+    / ``bucket_waste`` steer the padding-waste heuristic, priced by
+    measured step times unless ``bucket_cost="proxy"``; ``max_buckets=1``
     restores the single global-max call); model/data geometry fields raise
     a ``ValueError`` naming the field.  Multi-seed grids keep one dataset
     copy per *distinct seed* in device memory, not per point.
@@ -729,5 +814,6 @@ def run_sweep(setting: BHFLSetting, seeds=(0,), *,
                       edge_stragglers=edge_stragglers, normalize=normalize,
                       history_dtype=history_dtype, kernel_mode=kernel_mode,
                       max_buckets=max_buckets,
-                      bucket_waste=bucket_waste, **sim_kw)
+                      bucket_waste=bucket_waste, bucket_cost=bucket_cost,
+                      **sim_kw)
     return run_plan(plan, mesh=mesh, placement=placement)

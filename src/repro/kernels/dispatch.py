@@ -42,15 +42,32 @@ contributes exactly nothing; see docs/ARCHITECTURE.md §Kernel plane).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import hieavg
+from repro.core import baselines, hieavg
 from repro.core.hieavg import History
 
 PyTree = Any
+
+#: The engine round phases with a fused kernel, in round order.  Under a
+#: fused mode (``pallas``/``interpret``) every phase listed here runs in
+#: a Pallas kernel; under ``xla`` all run the pure-jnp reference paths.
+#: (``t_fedavg``/``d_fedavg`` — legacy baselines outside the switched
+#: set — and the tiny history-bookkeeping updates stay XLA by design.)
+ROUND_PHASES = ("train_conv_fwd_bwd", "sgd_update", "warm_edge_aggregate",
+                "warm_global_aggregate", "cold_boot_aggregate",
+                "fedavg_aggregate", "delayed_grad_aggregate", "eval_head")
+
+
+def fused_phase_coverage(mode: str = "auto") -> dict:
+    """Which round phases run fused under ``mode`` (resolved) — the
+    benchmarks' coverage column (`padded_flop_frac`-style)."""
+    fused = resolve_kernel_mode(mode) in ("pallas", "interpret")
+    return {phase: fused for phase in ROUND_PHASES}
 
 #: The accepted ``kernel_mode`` values, in resolution order.
 KERNEL_MODES = ("auto", "pallas", "interpret", "xla")
@@ -142,3 +159,118 @@ def sgd_update(params: PyTree, grads: PyTree, scale, *,
     from . import ops
     return ops.fused_sgd_update(params, grads, scale,
                                 interpret=_interpret(mode))
+
+
+def conv3x3_bias_relu(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+                      mode: str = "auto") -> jnp.ndarray:
+    """The CNN conv block ``relu(conv3x3_same(x, w) + b)``.
+
+    The fused path runs the im2col matmul with bias+ReLU epilogue (and
+    both backward matmuls) in Pallas; ``xla`` is the engine's original
+    ``_conv3x3_same_im2col`` einsum + separate bias/ReLU, bit-identical
+    to what ``cnn_apply_fast`` always did.
+    """
+    mode = resolve_kernel_mode(mode)
+    if mode == "xla":
+        from repro.models.cnn import _conv3x3_same_im2col
+        return jax.nn.relu(_conv3x3_same_im2col(x, w) + b)
+    from . import ops
+    return ops.conv3x3_bias_relu(x, w, b, interpret=_interpret(mode))
+
+
+def eval_head(feats: jnp.ndarray, wmat: jnp.ndarray, bias: jnp.ndarray,
+              labels: jnp.ndarray, *, mode: str = "auto") -> jnp.ndarray:
+    """Correct-prediction count of the classifier head (scalar int32).
+
+    The fused path folds logits → argmax → compare → count into the
+    matmul tiles; ``xla`` is the plain three-op chain.
+    """
+    mode = resolve_kernel_mode(mode)
+    if mode == "xla":
+        logits = feats @ wmat + bias
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jnp.sum((pred == labels.astype(jnp.int32)).astype(jnp.int32))
+    from . import ops
+    return ops.eval_head(feats, wmat, bias, labels,
+                         interpret=_interpret(mode))
+
+
+# ------------------------------------------------- cold boot + baselines
+# All three entries below are instances of the generalized coefficient
+# aggregate (``kernels.coef_agg``): the tiny [n] coefficient recipe is
+# computed here in XLA — matching each reference path's normalization
+# bit-for-bit — and the heavy [n, L] weighted reduction runs fused.
+
+def edge_aggregate_cold_batched(stacked_w: PyTree, valid: jnp.ndarray, *,
+                                mode: str = "auto") -> PyTree:
+    """Cold-boot edge mean for all N edges (eq. 2) —
+    ``hieavg.edge_aggregate_cold_batched`` semantics, kernel-routed.
+
+    stacked_w leaves ``[N, J, ...]``; ``valid`` [N, J].  Padded slots
+    carry zero coefficient; an all-invalid edge aggregates to exact
+    zeros (the 1e-12 denominator floor), never a division by zero.
+    """
+    mode = resolve_kernel_mode(mode)
+    if mode == "xla":
+        return hieavg.edge_aggregate_cold_batched(stacked_w, valid)
+    from . import ops
+    v = valid.astype(jnp.float32)
+    pw = v / jnp.maximum(jnp.sum(v, axis=-1, keepdims=True), 1e-12)
+    fn = functools.partial(ops.fused_coef_aggregate,
+                           interpret=_interpret(mode))
+    return jax.vmap(fn)(stacked_w, pw)
+
+
+def global_aggregate_cold(stacked_w: PyTree, j_per_edge: jnp.ndarray, *,
+                          mode: str = "auto") -> PyTree:
+    """Cold-boot global J_i-weighted mean (eq. 3) —
+    ``hieavg.global_aggregate_cold`` semantics, kernel-routed."""
+    mode = resolve_kernel_mode(mode)
+    if mode == "xla":
+        return hieavg.global_aggregate_cold(stacked_w, j_per_edge)
+    from . import ops
+    pw = j_per_edge.astype(jnp.float32) \
+        / jnp.maximum(jnp.sum(j_per_edge), 1e-12)
+    return ops.fused_coef_aggregate(stacked_w, pw,
+                                    interpret=_interpret(mode))
+
+
+def fedavg(stacked_w: PyTree, part_weights: jnp.ndarray, *,
+           mode: str = "auto") -> PyTree:
+    """Weighted FedAvg — ``baselines.fedavg`` semantics, kernel-routed."""
+    mode = resolve_kernel_mode(mode)
+    if mode == "xla":
+        return baselines.fedavg(stacked_w, part_weights)
+    from . import ops
+    coef = part_weights / jnp.maximum(jnp.sum(part_weights), 1e-12)
+    return ops.fused_coef_aggregate(stacked_w, coef,
+                                    interpret=_interpret(mode))
+
+
+def delayed_grad(stacked_w: PyTree, mask: jnp.ndarray, pending: PyTree,
+                 age: jnp.ndarray, beta, delta,
+                 part_weights: jnp.ndarray, *, mode: str = "auto"
+                 ) -> tuple[PyTree, PyTree, jnp.ndarray]:
+    """Delayed-gradient aggregation — ``baselines.delayed_grad``
+    semantics, kernel-routed.
+
+    The aggregate is the pair form of the coefficient kernel: a present
+    slot contributes ``coef·w``, a missing one its staleness-discounted
+    pending update ``coef·p`` — the fill + weighted mean in one pass.
+    The tiny pending/age store updates stay XLA (pure data movement).
+    """
+    mode = resolve_kernel_mode(mode)
+    if mode == "xla":
+        return baselines.delayed_grad(stacked_w, mask, pending, age,
+                                      beta, delta, part_weights)
+    from . import ops
+    m = mask.astype(jnp.float32)
+    k_prime = age + 1.0
+    stale_c = (beta ** k_prime) * (k_prime <= delta).astype(jnp.float32)
+    coef = part_weights * (m + (1.0 - m) * stale_c)
+    coef = coef / jnp.maximum(jnp.sum(coef), 1e-12)
+    agg = ops.fused_coef_aggregate_pair(stacked_w, pending, coef * m,
+                                        coef * (1.0 - m),
+                                        interpret=_interpret(mode))
+    new_age = (age + 1.0) * (1.0 - m)
+    return agg, stacked_w, new_age

@@ -1,0 +1,82 @@
+"""Fused eval-head Pallas kernel: logits → argmax → correct-count.
+
+The engine's post-scan eval maps ``cnn_accuracy_fast`` over every global
+round: a dense matmul for the logits, an argmax, an equality compare and
+a mean — three extra XLA passes over a ``[M, C]`` logits buffer that is
+never needed again.  This kernel folds the whole chain into the matmul
+tile: each program instance contracts a ``[TILE_M, F]`` block of pooled
+features against the full classifier matrix, takes the row argmax and
+compares against the labels without the logits ever leaving VMEM.  Per
+tile it emits a single ``[1, 1]`` int32 correct-count, and the tiny
+``[num_tiles, 1]`` partials are summed in XLA — no cross-program
+accumulation, so the kernel stays correct under ``vmap`` (sweep ``[P]``
+axes prepend as grid dims).
+
+Padding: M is padded to a TILE_M multiple with zero feature rows and
+``label = -1`` — argmax is always ≥ 0, so padded rows can never count as
+correct (an exact no-op, matching the kernel plane's padded-slot
+contract).
+
+Oracle: ``ref.eval_head_ref``.  Backend selection lives in
+``kernels.dispatch.eval_head``; ``models.cnn.cnn_accuracy_fast`` divides
+the count by the true row count to return an accuracy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dispatch import default_interpret
+
+TILE_M = 256
+
+
+def _kernel(f_ref, w_ref, b_ref, y_ref, out_ref):
+    """One [TILE_M, F] block: correct-count of argmax(f @ W + b) vs y."""
+    f32 = jnp.float32
+    logits = jnp.dot(f_ref[...].astype(f32), w_ref[...].astype(f32),
+                     preferred_element_type=f32) + b_ref[...].astype(f32)
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)     # [TILE_M]
+    hit = (pred == y_ref[...][:, 0]).astype(jnp.int32)
+    out_ref[0, 0] = jnp.sum(hit)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def eval_head(feats: jnp.ndarray, wmat: jnp.ndarray, bias: jnp.ndarray,
+              labels: jnp.ndarray, interpret: bool | None = None
+              ) -> jnp.ndarray:
+    """Correct-prediction count of the classifier head in one fused pass.
+
+    feats: [M, F]; wmat: [F, C]; bias: [C]; labels: [M] int.  Returns a
+    scalar int32 count of rows where ``argmax(feats @ wmat + bias) ==
+    labels``.  Semantics = ``ref.eval_head_ref`` (f32 logits math, first-
+    max-wins argmax).  ``interpret=None`` auto-detects the backend.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    m, f = feats.shape
+    c = wmat.shape[1]
+    pad = (-m) % TILE_M
+    mp = m + pad
+    nt = mp // TILE_M
+    if pad:
+        feats = jnp.pad(feats, ((0, pad), (0, 0)))
+    lab = jnp.full((mp, 1), -1, jnp.int32)
+    lab = lab.at[:m, 0].set(labels.astype(jnp.int32))
+    counts = pl.pallas_call(
+        _kernel,
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((TILE_M, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, c), lambda i: (0, 0)),
+            pl.BlockSpec((1, c), lambda i: (0, 0)),
+            pl.BlockSpec((TILE_M, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nt, 1), jnp.int32),
+        interpret=interpret,
+    )(feats, wmat, bias[None, :], lab)
+    return jnp.sum(counts)

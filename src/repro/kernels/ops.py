@@ -20,6 +20,13 @@ pytrees, dispatching each leaf (flattened to ``[n, L]``) through the fused
 ``fused_sgd_update`` is the train-step inner loop: the masked SGD update
 ``w − (lr·ok)·g`` in one pass per leaf (``kernels.sgd_update``).
 
+``conv3x3_bias_relu`` / ``eval_head`` (re-exported from their kernel
+modules) and the ``fused_coef_aggregate`` pair close the rest of the
+round: the CNN conv block with its fused bias+ReLU epilogue and custom
+VJP, the classifier-head correct-count eval, and the generalized
+coefficient aggregate shared by the cold-boot means, FedAvg and the
+delayed-gradient mix (zero-coefficient padded slots stay exact no-ops).
+
 ``flash_attention`` is the multi-head GQA front-end of the single-head
 kernel: batch, kv-head and group dims are vmapped (Pallas prepends them as
 grid dimensions).
@@ -39,7 +46,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.hieavg import History
+from .coef_agg import coef_agg, coef_agg_pair
+from .conv3x3 import conv3x3_bias_relu
 from .dispatch import default_interpret
+from .eval_head import eval_head
 from .flash_attention import flash_attention_1h
 from .hieavg_agg import hieavg_agg
 from .sgd_update import sgd_update
@@ -141,6 +151,41 @@ def fused_edge_aggregate(stacked_w: PyTree, mask: jnp.ndarray,
     pw = jnp.full((n,), 1.0 / n, jnp.float32)
     return fused_mix_and_update(stacked_w, mask, history, pw, gamma0, lam,
                                 normalize, interpret=interpret)
+
+
+# --------------------------------------------------------------- coef agg
+def fused_coef_aggregate(stacked_w: PyTree, coef: jnp.ndarray, *,
+                         interpret: Optional[bool] = None) -> PyTree:
+    """``Σ_n coef[n] · w[n]`` per leaf in one fused pass (f32 outputs).
+
+    The shared core of the cold-boot means and FedAvg: the caller bakes
+    every normalization into ``coef`` (see ``dispatch``), so zero-coef
+    padded slots are exact no-ops.  Leaves ``[n, ...]`` → ``[...]``.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+
+    def one(w):
+        n = w.shape[0]
+        return coef_agg(w.reshape(n, -1), coef,
+                        interpret=interpret).reshape(w.shape[1:])
+
+    return jax.tree.map(one, stacked_w)
+
+
+def fused_coef_aggregate_pair(stacked_w: PyTree, aux: PyTree,
+                              ca: jnp.ndarray, cb: jnp.ndarray, *,
+                              interpret: Optional[bool] = None) -> PyTree:
+    """``Σ_n ca[n]·w[n] + cb[n]·aux[n]`` per leaf (delayed-grad mix)."""
+    if interpret is None:
+        interpret = default_interpret()
+
+    def one(w, a):
+        n = w.shape[0]
+        return coef_agg_pair(w.reshape(n, -1), a.reshape(n, -1), ca, cb,
+                             interpret=interpret).reshape(w.shape[1:])
+
+    return jax.tree.map(one, stacked_w, aux)
 
 
 # -------------------------------------------------------------------- sgd

@@ -62,17 +62,33 @@ def _conv3x3_same_im2col(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("...k,ko->...o", cols, w.reshape(-1, w.shape[-1]))
 
 
+def _pool_flatten(x: jnp.ndarray) -> jnp.ndarray:
+    # 2x2 stride-2 max-pool via reshape — identical to reduce_window but its
+    # gradient avoids SelectAndScatter, which is pathologically slow on CPU.
+    b, h, w_, c = x.shape
+    x = x.reshape(b, h // 2, 2, w_ // 2, 2, c).max(axis=(2, 4))
+    return x.reshape(x.shape[0], -1)
+
+
 def _apply(params: dict, images: jnp.ndarray, conv) -> jnp.ndarray:
     x = images
     for w, b in ((params["conv1"], params["b1"]),
                  (params["conv2"], params["b2"])):
         x = jax.nn.relu(conv(x, w) + b)
-    # 2x2 stride-2 max-pool via reshape — identical to reduce_window but its
-    # gradient avoids SelectAndScatter, which is pathologically slow on CPU.
-    b, h, w_, c = x.shape
-    x = x.reshape(b, h // 2, 2, w_ // 2, 2, c).max(axis=(2, 4))
-    x = x.reshape(x.shape[0], -1)
+    x = _pool_flatten(x)
     return x @ params["dense"] + params["b3"]
+
+
+def _features_fused(params: dict, images: jnp.ndarray, kernel_mode: str
+                    ) -> jnp.ndarray:
+    """Pooled/flattened features with the conv blocks kernel-routed
+    (``kernels.dispatch.conv3x3_bias_relu`` — fused matmul+bias+ReLU)."""
+    from repro.kernels import dispatch as _kd
+    x = images
+    for w, b in ((params["conv1"], params["b1"]),
+                 (params["conv2"], params["b2"])):
+        x = _kd.conv3x3_bias_relu(x, w, b, mode=kernel_mode)
+    return _pool_flatten(x)
 
 
 def cnn_apply(params: dict, images: jnp.ndarray) -> jnp.ndarray:
@@ -80,9 +96,21 @@ def cnn_apply(params: dict, images: jnp.ndarray) -> jnp.ndarray:
     return _apply(params, images, _conv3x3_same)
 
 
-def cnn_apply_fast(params: dict, images: jnp.ndarray) -> jnp.ndarray:
-    """``cnn_apply`` with the im2col conv — the engine's training path."""
-    return _apply(params, images, _conv3x3_same_im2col)
+def cnn_apply_fast(params: dict, images: jnp.ndarray,
+                   kernel_mode: str = "xla") -> jnp.ndarray:
+    """``cnn_apply`` with the im2col conv — the engine's training path.
+
+    ``kernel_mode`` (resolved or ``"auto"``) routes the conv blocks:
+    ``"xla"`` (the default, bit-identical to what this function always
+    did) keeps the plain im2col einsum; the fused modes run them through
+    the Pallas conv kernel.  The engine threads its resolved mode here.
+    """
+    from repro.kernels import dispatch as _kd
+    mode = _kd.resolve_kernel_mode(kernel_mode)
+    if mode == "xla":
+        return _apply(params, images, _conv3x3_same_im2col)
+    feats = _features_fused(params, images, mode)
+    return feats @ params["dense"] + params["b3"]
 
 
 def _loss(apply, params, images, labels):
@@ -96,9 +124,11 @@ def cnn_loss(params: dict, images: jnp.ndarray, labels: jnp.ndarray
     return _loss(cnn_apply, params, images, labels)
 
 
-def cnn_loss_fast(params: dict, images: jnp.ndarray, labels: jnp.ndarray
-                  ) -> jnp.ndarray:
-    return _loss(cnn_apply_fast, params, images, labels)
+def cnn_loss_fast(params: dict, images: jnp.ndarray, labels: jnp.ndarray,
+                  kernel_mode: str = "xla") -> jnp.ndarray:
+    def apply(p, im):
+        return cnn_apply_fast(p, im, kernel_mode=kernel_mode)
+    return _loss(apply, params, images, labels)
 
 
 def _accuracy(apply, params, images, labels):
@@ -111,7 +141,21 @@ def cnn_accuracy(params: dict, images: jnp.ndarray, labels: jnp.ndarray
     return _accuracy(cnn_apply, params, images, labels)
 
 
-def cnn_accuracy_fast(params: dict, images: jnp.ndarray, labels: jnp.ndarray
-                      ) -> jnp.ndarray:
-    """``cnn_accuracy`` on the im2col forward (the engine's eval path)."""
-    return _accuracy(cnn_apply_fast, params, images, labels)
+def cnn_accuracy_fast(params: dict, images: jnp.ndarray, labels: jnp.ndarray,
+                      kernel_mode: str = "xla") -> jnp.ndarray:
+    """``cnn_accuracy`` on the im2col forward (the engine's eval path).
+
+    Under a fused ``kernel_mode`` the whole eval runs kernel-routed: conv
+    blocks through the fused conv kernel, then the classifier head as one
+    logits → argmax → correct-count pass (``kernels.dispatch.eval_head``)
+    — the logits buffer never materializes.  Count / #rows equals the
+    mean-of-hits the XLA path computes (both exact in f32).
+    """
+    from repro.kernels import dispatch as _kd
+    mode = _kd.resolve_kernel_mode(kernel_mode)
+    if mode == "xla":
+        return _accuracy(cnn_apply_fast, params, images, labels)
+    feats = _features_fused(params, images, mode)
+    count = _kd.eval_head(feats, params["dense"], params["b3"], labels,
+                          mode=mode)
+    return count.astype(jnp.float32) / labels.shape[0]

@@ -23,15 +23,21 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.configs.bhfl_cnn import REDUCED
-from repro.core import hieavg
+from repro.core import baselines, hieavg
 from repro.fl import BHFLSimulator, build_inputs, plan_sweep, run_plan, \
     run_sweep
 from repro.fl.engine import (SHARED_DATA_FIELDS, run_engine,
                              run_engine_donated, split_inputs)
 from repro.kernels import dispatch as kd
+from repro.kernels.coef_agg import TILE as CTILE
+from repro.kernels.coef_agg import coef_agg, coef_agg_pair
+from repro.kernels.conv3x3 import conv3x3_bias_relu
+from repro.kernels.eval_head import eval_head
 from repro.kernels.ops import (fused_edge_aggregate_batched,
                                fused_mix_and_update)
-from repro.kernels.ref import sgd_update_ref
+from repro.kernels.ref import (coef_agg_pair_ref, coef_agg_ref,
+                               conv3x3_bias_relu_ref, eval_head_ref,
+                               sgd_update_ref)
 from repro.kernels.sgd_update import TILE, sgd_update
 
 TINY = dataclasses.replace(REDUCED, t_global_rounds=3, n_edges=3,
@@ -73,6 +79,9 @@ def test_unknown_kernel_mode_raises_naming_the_choices():
 
 
 # ----------------------------------------------------------- kernel oracles
+# Every test in this group is marked ``kernel_oracle``: CI runs them as a
+# dedicated interpret-mode oracle-parity job (`pytest -m kernel_oracle`).
+@pytest.mark.kernel_oracle
 @settings(max_examples=10, deadline=None)
 @given(n=st.integers(1, 9),
        l=st.sampled_from([1, 7, 100, TILE - 1, TILE, TILE + 1, 3 * TILE]),
@@ -89,6 +98,7 @@ def test_sgd_update_matches_ref_on_tile_tails(n, l, seed):
                                rtol=1e-6, atol=1e-7)
 
 
+@pytest.mark.kernel_oracle
 def test_sgd_update_zero_scale_is_exact_identity():
     """scale = lr x step-validity: a padded sweep step (0) must be an
     exact no-op, bitwise."""
@@ -98,6 +108,7 @@ def test_sgd_update_zero_scale_is_exact_identity():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(w))
 
 
+@pytest.mark.kernel_oracle
 def test_sgd_update_bf16_storage():
     w = jax.random.normal(jax.random.key(0), (3, 100), jnp.bfloat16)
     g = jax.random.normal(jax.random.key(1), (3, 100), jnp.bfloat16)
@@ -109,6 +120,7 @@ def test_sgd_update_bf16_storage():
                                atol=1e-7)
 
 
+@pytest.mark.kernel_oracle
 @pytest.mark.parametrize("l", [1, 40, TILE + 3])
 def test_hieavg_agg_mixed_history_dtype(l):
     """The engine's ``history_dtype`` layout: f32 submissions, bf16
@@ -135,6 +147,7 @@ def test_hieavg_agg_mixed_history_dtype(l):
                                    np.asarray(r, np.float32), atol=6e-2)
 
 
+@pytest.mark.kernel_oracle
 def test_fused_batched_matches_core_batched_with_padding():
     """The engine's dense-layer entry: fused [N, J] aggregation ==
     ``hieavg.edge_aggregate_batched`` on a validity-masked layout with
@@ -167,6 +180,7 @@ def test_fused_batched_matches_core_batched_with_padding():
                                       np.asarray(h_ref.n_obs))
 
 
+@pytest.mark.kernel_oracle
 def test_fused_global_matches_core_traced_weights():
     """Eq. (5) with J-weighted traced part weights — the engine's global
     layer call."""
@@ -184,6 +198,221 @@ def test_fused_global_matches_core_traced_weights():
                                     jnp.float32(0.9), True, interpret=True)
     np.testing.assert_allclose(np.asarray(a_got["p"]),
                                np.asarray(a_ref["p"]), atol=1e-6)
+
+
+# ------------------------------------------------- conv / eval / coef oracles
+@pytest.mark.kernel_oracle
+@pytest.mark.parametrize("b,hw,cin,cout", [
+    (1, 5, 1, 3),     # M = 25 < TILE_M, single ragged tile
+    (2, 12, 4, 8),    # M = 288: one full tile + tail
+    (2, 16, 3, 7),    # M = 512: exact tile multiple, odd cout
+])
+def test_conv3x3_matches_ref_on_tile_tails(b, hw, cin, cout):
+    """The fused conv epilogue across M-tile tails (B·H·W not a multiple
+    of the 256-row tile) and non-multiple-of-anything channel counts."""
+    ks = jax.random.split(jax.random.key(0), 3)
+    x = jax.random.normal(ks[0], (b, hw, hw, cin))
+    w = jax.random.normal(ks[1], (3, 3, cin, cout)) * 0.3
+    bb = jax.random.normal(ks[2], (cout,)) * 0.3
+    got = conv3x3_bias_relu(x, w, bb, interpret=True)
+    ref = conv3x3_bias_relu_ref(x, w, bb)
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.kernel_oracle
+def test_conv3x3_grads_match_ref():
+    """The custom VJP: dx (via the XLA col2im autodiff of the im2col
+    construction), dw and db (the Pallas backward matmuls) against the
+    pure-jnp reference's autodiff."""
+    ks = jax.random.split(jax.random.key(1), 4)
+    x = jax.random.normal(ks[0], (2, 9, 9, 3))
+    w = jax.random.normal(ks[1], (3, 3, 3, 5)) * 0.3
+    b = jax.random.normal(ks[2], (5,)) * 0.3
+    dy = jax.random.normal(ks[3], (2, 9, 9, 5))
+
+    def loss(fn):
+        return lambda x, w, b: jnp.sum(fn(x, w, b) * dy)
+
+    gx, gw, gb = jax.grad(
+        loss(lambda x, w, b: conv3x3_bias_relu(x, w, b, interpret=True)),
+        argnums=(0, 1, 2))(x, w, b)
+    rx, rw, rb = jax.grad(loss(conv3x3_bias_relu_ref),
+                          argnums=(0, 1, 2))(x, w, b)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb), np.asarray(rb), atol=1e-4)
+
+
+@pytest.mark.kernel_oracle
+def test_conv3x3_bf16_storage():
+    """bf16 operands: f32 tile math, output cast back to bf16 — matching
+    the reference's f32-accumulate-then-cast within bf16 rounding."""
+    ks = jax.random.split(jax.random.key(2), 3)
+    x = jax.random.normal(ks[0], (2, 8, 8, 4), jnp.bfloat16)
+    w = (jax.random.normal(ks[1], (3, 3, 4, 6)) * 0.3).astype(jnp.bfloat16)
+    b = (jax.random.normal(ks[2], (6,)) * 0.3).astype(jnp.bfloat16)
+    got = conv3x3_bias_relu(x, w, b, interpret=True)
+    ref = conv3x3_bias_relu_ref(x, w, b)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32), atol=1e-2)
+
+
+@pytest.mark.kernel_oracle
+@pytest.mark.parametrize("m", [1, 100, 256, 257, 400])
+def test_eval_head_matches_ref_on_tile_tails(m):
+    """Exact correct-count equality across M-tile tails (the count is an
+    integer sum of per-tile integer partials — no tolerance)."""
+    ks = jax.random.split(jax.random.key(3), 4)
+    f, c = 33, 10
+    feats = jax.random.normal(ks[0], (m, f))
+    wmat = jax.random.normal(ks[1], (f, c)) * 0.1
+    bias = jax.random.normal(ks[2], (c,)) * 0.1
+    labels = jax.random.randint(ks[3], (m,), 0, c)
+    got = eval_head(feats, wmat, bias, labels, interpret=True)
+    ref = eval_head_ref(feats, wmat, bias, labels)
+    assert got.dtype == jnp.int32
+    assert int(got) == int(ref)
+
+
+@pytest.mark.kernel_oracle
+def test_eval_head_bf16_inputs():
+    """bf16 feats/weights: both paths cast to f32 before the identical
+    matmul, so the argmax — and the count — must agree exactly."""
+    ks = jax.random.split(jax.random.key(4), 4)
+    m, f, c = 70, 21, 5
+    feats = jax.random.normal(ks[0], (m, f), jnp.bfloat16)
+    wmat = (jax.random.normal(ks[1], (f, c)) * 0.2).astype(jnp.bfloat16)
+    bias = (jax.random.normal(ks[2], (c,)) * 0.2).astype(jnp.bfloat16)
+    labels = jax.random.randint(ks[3], (m,), 0, c)
+    got = eval_head(feats, wmat, bias, labels, interpret=True)
+    ref = eval_head_ref(feats, wmat, bias, labels)
+    assert int(got) == int(ref)
+
+
+@pytest.mark.kernel_oracle
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 8),
+       l=st.sampled_from([1, 37, CTILE - 1, CTILE, CTILE + 5]),
+       seed=st.integers(0, 99))
+def test_coef_agg_matches_ref_on_tile_tails(n, l, seed):
+    ks = jax.random.split(jax.random.key(seed), 4)
+    w = jax.random.normal(ks[0], (n, l))
+    aux = jax.random.normal(ks[1], (n, l))
+    coef = jax.nn.softmax(jax.random.normal(ks[2], (n,)))
+    msk = (jax.random.uniform(ks[3], (n,)) > 0.4).astype(jnp.float32)
+    got = coef_agg(w, coef, interpret=True)
+    ref = coef_agg_ref(w, coef)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
+    got_p = coef_agg_pair(w, aux, coef * msk, coef * (1.0 - msk),
+                          interpret=True)
+    ref_p = coef_agg_pair_ref(w, aux, coef * msk, coef * (1.0 - msk))
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(ref_p),
+                               atol=1e-6)
+
+
+@pytest.mark.kernel_oracle
+def test_coef_agg_bf16_storage_promotes_to_f32():
+    """bf16 stacked weights with f32 coefficients: the aggregate is f32 on
+    both paths (XLA's promotion rule), values within exact f32 math of the
+    bf16 inputs."""
+    w = jax.random.normal(jax.random.key(5), (4, 1000), jnp.bfloat16)
+    coef = jnp.asarray([0.4, 0.3, 0.2, 0.1])
+    got = coef_agg(w, coef, interpret=True)
+    ref = coef_agg_ref(w, coef)
+    assert got.dtype == ref.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-6)
+
+
+@pytest.mark.kernel_oracle
+def test_coef_agg_zero_coef_slots_are_exact_noops():
+    """The padded-slot contract: a zero-coefficient row contributes exactly
+    nothing, bitwise, whatever garbage it carries (0 * x == 0 in f32 for
+    finite x)."""
+    w_live = jax.random.normal(jax.random.key(6), (3, 500))
+    garbage = jnp.full((2, 500), 1e6)
+    w_pad = jnp.concatenate([w_live, garbage])
+    w_zero = jnp.concatenate([w_live, jnp.zeros((2, 500))])
+    coef = jnp.asarray([0.5, 0.3, 0.2, 0.0, 0.0])
+    a = coef_agg(w_pad, coef, interpret=True)
+    b = coef_agg(w_zero, coef, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------- dispatch entry parity
+@pytest.mark.kernel_oracle
+def test_dispatch_cold_aggregates_match_hieavg_references():
+    """The cold-boot dispatch entries (generalized coefficient aggregate)
+    against ``core.hieavg`` — including an all-invalid edge, which must
+    aggregate to exact zeros on both paths, and padded garbage slots."""
+    ks = jax.random.split(jax.random.key(7), 2)
+    w = {"a": jax.random.normal(ks[0], (3, 4, 5, 3)),
+         "b": jax.random.normal(ks[1], (3, 4, 17))}
+    valid = jnp.asarray([[1, 1, 1, 0], [0, 0, 0, 0], [1, 1, 1, 1]], bool)
+    got = kd.edge_aggregate_cold_batched(w, valid, mode="interpret")
+    ref = hieavg.edge_aggregate_cold_batched(w, valid)
+    for k in w:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                                   atol=1e-6)
+    wg = {"p": jax.random.normal(jax.random.key(8), (3, 7, 2))}
+    j_arr = jnp.asarray([3.0, 2.0, 4.0])
+    got_g = kd.global_aggregate_cold(wg, j_arr, mode="interpret")
+    ref_g = hieavg.global_aggregate_cold(wg, j_arr)
+    np.testing.assert_allclose(np.asarray(got_g["p"]),
+                               np.asarray(ref_g["p"]), atol=1e-6)
+
+
+@pytest.mark.kernel_oracle
+def test_dispatch_baseline_aggregates_match_references():
+    """``kd.fedavg`` / ``kd.delayed_grad`` against ``core.baselines`` —
+    same coefficients, same staleness discount, same store updates."""
+    ks = jax.random.split(jax.random.key(9), 3)
+    w = {"p": jax.random.normal(ks[0], (5, 11, 3)),
+         "q": jax.random.normal(ks[1], (5, 40))}
+    pw = jnp.asarray([2.0, 1.0, 3.0, 0.0, 0.0])   # padded slots: zero weight
+    got = kd.fedavg(w, pw, mode="interpret")
+    ref = baselines.fedavg(w, pw)
+    for k in w:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(ref[k]),
+                                   atol=1e-6)
+
+    pending = jax.tree.map(lambda x: x * 0.9 + 0.05, w)
+    mask = jnp.asarray([True, False, True, False, True])
+    age = jnp.asarray([0.0, 1.0, 0.0, 4.0, 2.0])
+    beta, delta = jnp.float32(0.5), jnp.float32(3.0)
+    a_got, p_got, age_got = kd.delayed_grad(w, mask, pending, age, beta,
+                                            delta, pw, mode="interpret")
+    a_ref, p_ref, age_ref = baselines.delayed_grad(w, mask, pending, age,
+                                                   beta, delta, pw)
+    for k in w:
+        np.testing.assert_allclose(np.asarray(a_got[k]),
+                                   np.asarray(a_ref[k]), atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(p_got[k]),
+                                      np.asarray(p_ref[k]))
+    np.testing.assert_array_equal(np.asarray(age_got), np.asarray(age_ref))
+
+
+@pytest.mark.kernel_oracle
+def test_dispatch_conv_eval_interpret_matches_xla_branch():
+    """The two train/eval dispatch entries: interpret vs the xla branch
+    (which is the engine's original conv/eval chain, bit-for-bit)."""
+    ks = jax.random.split(jax.random.key(10), 3)
+    x = jax.random.normal(ks[0], (2, 8, 8, 3))
+    w = jax.random.normal(ks[1], (3, 3, 3, 6)) * 0.3
+    b = jax.random.normal(ks[2], (6,)) * 0.3
+    np.testing.assert_allclose(
+        np.asarray(kd.conv3x3_bias_relu(x, w, b, mode="interpret")),
+        np.asarray(kd.conv3x3_bias_relu(x, w, b, mode="xla")), atol=1e-5)
+
+    ks = jax.random.split(jax.random.key(11), 4)
+    feats = jax.random.normal(ks[0], (50, 20))
+    wmat = jax.random.normal(ks[1], (20, 10)) * 0.1
+    bias = jax.random.normal(ks[2], (10,)) * 0.1
+    labels = jax.random.randint(ks[3], (50,), 0, 10)
+    assert int(kd.eval_head(feats, wmat, bias, labels, mode="interpret")) \
+        == int(kd.eval_head(feats, wmat, bias, labels, mode="xla"))
 
 
 # ------------------------------------------------------------ engine parity
@@ -238,6 +467,26 @@ def test_sweep_kernel_plane_parity_multibucket():
                                    atol=1e-6)
         np.testing.assert_allclose(si.loss[p, :tv], r.loss, rtol=1e-5,
                                    atol=1e-6)
+
+
+def test_sweep_mixed_aggregation_kernel_plane_parity():
+    """The acceptance pin, mixed-aggregation edition: hieavg, delayed_grad
+    and fedavg points compile as ONE traced-"switched" program across a
+    bucketed shape-changing grid, and the fused kernels must reproduce
+    the pure-XLA grid per point — every aggregation dispatch entry
+    (warm, cold, fedavg, delayed-grad) exercised inside one scan.
+    ``bucket_cost="proxy"`` on both plans so the grids bucket identically
+    and the comparison is point-for-point by construction."""
+    ovs = [{"aggregation": "fedavg"}, {"aggregation": "delayed_grad"},
+           {"n_edges": 2}, {}]
+    kwb = dict(overrides=ovs, max_buckets=2, bucket_waste=1.0,
+               bucket_cost="proxy", **KW)
+    plan_x = plan_sweep(TINY, kernel_mode="xla", **kwb)
+    plan_i = plan_sweep(TINY, kernel_mode="interpret", **kwb)
+    assert plan_x.aggregator == plan_i.aggregator == "switched"
+    sx, si = run_plan(plan_x), run_plan(plan_i)
+    _close(sx, si)
+    np.testing.assert_allclose(si.sim_clock, sx.sim_clock, rtol=1e-5)
 
 
 # ---------------------------------------------------------------- donation

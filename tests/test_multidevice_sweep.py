@@ -70,12 +70,27 @@ _CHILD = textwrap.dedent("""
 
     # kernel plane in the shard_map child: the fused kernels (Pallas
     # interpreter on these host devices) under real 4-way sharding must
-    # reproduce the pure-XLA sharded grid per point
+    # reproduce the pure-XLA sharded grid per point (proxy bucketing: no
+    # point timing interpret-mode steps just to pick bucket shapes)
     kp = run_sweep(TINY, overrides=ovs, placement="shard", max_buckets=1,
-                   kernel_mode="interpret", **KW)
+                   kernel_mode="interpret", bucket_cost="proxy", **KW)
     np.testing.assert_allclose(kp.accuracy, b.accuracy, atol=1e-6)
     np.testing.assert_allclose(kp.loss, b.loss, rtol=1e-5, atol=1e-6)
     np.testing.assert_allclose(kp.sim_clock, b.sim_clock, rtol=1e-5)
+
+    # ...and with the full dispatch surface: a mixed-aggregation grid
+    # (hieavg + delayed_grad + fedavg = the traced "switched" program,
+    # exercising the warm, cold, fedavg and delayed-grad kernel entries)
+    # sharded 4-way, fused vs pure-XLA
+    mix = [{"aggregation": "fedavg"}, {"aggregation": "delayed_grad"},
+           {"straggler_frac": 0.4}, {}]
+    mx = run_sweep(TINY, overrides=mix, placement="shard", max_buckets=1,
+                   **KW)
+    mi = run_sweep(TINY, overrides=mix, placement="shard", max_buckets=1,
+                   kernel_mode="interpret", **KW)
+    np.testing.assert_allclose(mi.accuracy, mx.accuracy, atol=1e-6)
+    np.testing.assert_allclose(mi.loss, mx.loss, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(mi.sim_clock, mx.sim_clock, rtol=1e-5)
     print("MULTIDEVICE_SWEEP_OK")
 """)
 

@@ -61,6 +61,52 @@ def test_straggler_masks_respect_fraction():
     assert (~sim.edge_masks[-1]).sum() == 1
 
 
+# -------------------------------------------- heterogeneous device clocks
+def test_device_rates_unit_is_bitwise_the_homogeneous_fleet():
+    """``device_rates=1`` everywhere must be the exact homogeneous draw —
+    the multiplier is applied, not re-sampled."""
+    from repro.fl import build_inputs
+
+    a = BHFLSimulator(TINY, "hieavg", "temporary", "temporary", **KW)
+    b = BHFLSimulator(TINY, "hieavg", "temporary", "temporary",
+                      device_rates=[1.0] * 9, **KW)
+    np.testing.assert_array_equal(np.asarray(build_inputs(b).dev_time),
+                                  np.asarray(build_inputs(a).dev_time))
+
+
+def test_device_rates_slow_device_is_capped_at_the_deadline():
+    """A 100x-slow device must hit the per-round submission deadline
+    (deadline-based aggregation) while every other device's draw is
+    untouched, and the simulated clock must slow down accordingly."""
+    from repro.core.latency import device_deadline
+    from repro.fl import build_inputs
+
+    rates = [1.0] * 9
+    rates[0] = 100.0          # device 0 = edge 0, slot 0
+    a = BHFLSimulator(TINY, "hieavg", "none", "none", **KW)
+    b = BHFLSimulator(TINY, "hieavg", "none", "none",
+                      device_rates=rates, **KW)
+    ta = np.asarray(build_inputs(a).dev_time)   # [T, K, N, J]
+    tb = np.asarray(build_inputs(b).dev_time)
+    np.testing.assert_array_equal(tb[:, :, 1:, :], ta[:, :, 1:, :])
+    np.testing.assert_array_equal(tb[:, :, 0, 1:], ta[:, :, 0, 1:])
+    np.testing.assert_allclose(tb[:, :, 0, 0], device_deadline(b.lat),
+                               rtol=1e-6)
+    ra, rb = a.run(), b.run()
+    # the *empirical* simulated clock slows down (sim_latency is the
+    # Sec. 5 expectation model, which ignores rate_mult by design)
+    assert rb.sim_clock[-1] > ra.sim_clock[-1]
+
+
+def test_device_rates_validation():
+    with pytest.raises(ValueError, match="every device"):
+        BHFLSimulator(TINY, "hieavg", "temporary", "temporary",
+                      device_rates=[1.0, 2.0], **KW)
+    with pytest.raises(ValueError, match="positive"):
+        BHFLSimulator(TINY, "hieavg", "temporary", "temporary",
+                      device_rates=[1.0] * 8 + [-1.0], **KW)
+
+
 def test_leader_failure_resilience():
     """The paper's single-point-of-failure claim: the Raft consortium
     re-elects after a leader crash and training finishes all rounds."""
