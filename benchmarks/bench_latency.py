@@ -1,20 +1,27 @@
 """Latency-fabric throughput — writes ``BENCH_latency.json``.
 
-Measures points/sec for the fig7 grid (both panels: lp_device scaling +
-consensus-multiplier × K — all shape- or data-changing latency knobs)
-driven two ways:
+Measures points/sec for the fig7 grid (all three panels: lp_device
+scaling + consensus-multiplier × K + the consensus zoo — every shape- or
+data-changing latency knob) driven two ways:
 
   * ``legacy_loop`` — one ``BHFLSimulator.run_legacy`` per point: the
     pre-fabric way to measure a latency×K tradeoff empirically (a Python
     loop of standalone runs, no clock accounting),
   * ``fabric_sweep`` — the whole grid as ONE compiled padded sweep
     through ``plan_sweep``/``execute_plan`` (``run_sweep``), simulated
-    clock trajectories included.
+    clock AND consensus-energy trajectories included.
+
+The JSON also carries a ``consensus`` block: per zoo protocol, a
+host-side Monte-Carlo chain replay (mean per-round latency/energy) next
+to its closed-form expectations and their relative error — the bench-side
+echo of the ``consensus_mc`` test pins.
 
 Timings are best-of-``REPS`` after a warm-up run (the shared ``best_of``
 helper), like bench_engine/bench_sweep.  The budget is intentionally
 small (T=10, 1 local step) so the numbers track orchestration overhead,
-not training FLOPs.
+not training FLOPs.  ``smoke=True`` (the ``--smoke`` flag, used by
+tests/test_bench_emission.py) shrinks the grid/rounds/data so the whole
+emission path runs in seconds.
 
   PYTHONPATH=src python -m benchmarks.run --only latency --emit-json
 """
@@ -24,6 +31,7 @@ import dataclasses
 import json
 
 from repro.configs.bhfl_cnn import REDUCED
+from repro.core.consensus import CONSENSUS_MODELS, make_chain
 
 from .common import Csv, best_of
 from .fig7_latency import sweep_overrides
@@ -31,45 +39,82 @@ from .fig7_latency import sweep_overrides
 T_ROUNDS = 10
 KW = dict(n_train=1500, n_test=300, steps_per_epoch=1, normalize=True)
 REPS = 2
+MC_ROUNDS = 200
 
 
-def _setting():
-    return dataclasses.replace(REDUCED, t_global_rounds=T_ROUNDS)
+def _setting(t_rounds: int = T_ROUNDS):
+    return dataclasses.replace(REDUCED, t_global_rounds=t_rounds)
 
 
-def main(emit_json: bool = True) -> dict:
+def _consensus_block(setting, mc_rounds: int) -> dict:
+    """Per-protocol MC chain replay vs closed forms (host-side, no jit)."""
+    out = {}
+    for name, spec in CONSENSUS_MODELS.items():
+        params = spec.make_params(setting.link_latency, setting.n_shards)
+        chain = make_chain(name, setting.n_edges,
+                           link_latency=setting.link_latency,
+                           n_shards=setting.n_shards)
+        for t in range(mc_rounds):
+            chain.elect_leader()
+            chain.commit_block(f"e@{t}", f"g@{t}")
+        mc_lat = chain.clock / mc_rounds
+        mc_en = chain.energy / mc_rounds
+        want_lat = spec.expected_latency(params, setting.n_edges)
+        want_en = spec.expected_energy(params, setting.n_edges)
+        out[name] = {
+            "mc_latency_s": round(mc_lat, 5),
+            "expected_latency_s": round(want_lat, 5),
+            "rel_err_latency": round(abs(mc_lat - want_lat) / want_lat, 4),
+            "mc_energy_j": round(mc_en, 5),
+            "expected_energy_j": round(want_en, 5),
+            "rel_err_energy": round(abs(mc_en - want_en) / want_en, 4),
+        }
+    return out
+
+
+def main(emit_json: bool = True, smoke: bool = False) -> dict:
     from repro.fl import BHFLSimulator, run_sweep
+
+    t_rounds = 3 if smoke else T_ROUNDS
+    kw = dict(KW, n_train=300, n_test=100) if smoke else KW
+    reps = 1 if smoke else REPS
+    mc_rounds = 50 if smoke else MC_ROUNDS
 
     csv = Csv("bench_latency")
     csv.row("path", "seconds", "points_per_sec")
-    overrides, _ = sweep_overrides()
+    overrides, _, split_c = sweep_overrides()
+    if smoke:
+        # panel (a) head + the zoo points: one shape bucket, every protocol
+        overrides = overrides[:1] + overrides[split_c:]
     n_pts = len(overrides)
 
     def legacy_loop():
         for ov in overrides:
-            BHFLSimulator(dataclasses.replace(_setting(), **ov),
+            BHFLSimulator(dataclasses.replace(_setting(t_rounds), **ov),
                           "hieavg", "temporary", "temporary",
-                          **KW).run_legacy()
+                          **kw).run_legacy()
 
-    t_legacy = best_of(legacy_loop, REPS)
+    t_legacy = best_of(legacy_loop, reps)
     csv.row("legacy_loop", f"{t_legacy:.2f}", f"{n_pts / t_legacy:.2f}")
 
     # max_buckets=1: this artifact's claim is the ONE-call sweep (E4);
     # bucketed throughput is bench_sweep's concern
-    t_sweep = best_of(lambda: run_sweep(_setting(), overrides=overrides,
-                                        max_buckets=1, **KW), REPS)
+    t_sweep = best_of(lambda: run_sweep(_setting(t_rounds),
+                                        overrides=overrides,
+                                        max_buckets=1, **kw), reps)
     csv.row("fabric_sweep", f"{t_sweep:.2f}", f"{n_pts / t_sweep:.2f}")
 
     out = {
         "setting": "REDUCED",
-        "grid": "fig7 (both panels)",
+        "grid": "fig7 (all panels, smoke)" if smoke else "fig7 (all panels)",
         "points": n_pts,
-        "t_global_rounds": T_ROUNDS,
-        "steps_per_epoch": KW["steps_per_epoch"],
-        "reps": REPS,
+        "t_global_rounds": t_rounds,
+        "steps_per_epoch": kw["steps_per_epoch"],
+        "reps": reps,
         "legacy_points_per_sec": round(n_pts / t_legacy, 3),
         "sweep_points_per_sec": round(n_pts / t_sweep, 3),
         "sweep_speedup_vs_legacy": round(t_legacy / t_sweep, 2),
+        "consensus": _consensus_block(_setting(t_rounds), mc_rounds),
     }
     if emit_json:
         with open("BENCH_latency.json", "w") as f:

@@ -10,7 +10,10 @@ round time off the engine clock next to the Sec. 5.1 expectation; panel
 *empirical* K* (fastest simulated time to a target accuracy,
 ``SweepResult.k_star_empirical``) next to the theoretical ``omega_bound``
 K* (``optimize_k`` under C1/C2 with the statistical Raft consensus
-model).  The latency constants are the paper's measured numbers (0.51 s
+model).  Panel (c) rides the consensus zoo through the SAME call —
+``consensus`` is a data-batched sweep field — and reads measured
+per-round latency/energy next to each protocol's closed-form models.
+The latency constants are the paper's measured numbers (0.51 s
 device<->edge transfer, 0.05 s edge<->edge link — Sec. 6.2.2).
 """
 from __future__ import annotations
@@ -20,8 +23,9 @@ import dataclasses
 import numpy as np
 
 from repro.configs.bhfl_cnn import REDUCED
-from repro.core import (BoundParams, LatencyParams, RaftParams,
-                        expected_consensus_latency, omega_bound, optimize_k)
+from repro.core import (CONSENSUS_MODELS, BoundParams, LatencyParams,
+                        RaftParams, expected_consensus_latency, omega_bound,
+                        optimize_k)
 from repro.fl import run_sweep
 
 from .common import Csv
@@ -34,28 +38,40 @@ CONS_MULTS = (1, 5, 10, 20, 40)
 K_GRID = (1, 2, 4)
 ACC_FRAC = 0.6     # empirical-K* target: 60% of the grid's best accuracy
 
+# panel (c): the consensus zoo under a stall-inducing multiplier — same
+# shapes as panel (a), so the protocol axis stays pure data in the one call
+ZOO_POINTS = ({"consensus": "raft", "consensus_mult": 20.0},
+              {"consensus": "pofel", "consensus_mult": 20.0},
+              {"consensus": "sharded", "consensus_mult": 20.0},
+              {"consensus": "sharded", "n_shards": 4,
+               "consensus_mult": 20.0})
+
 
 def _setting():
     return dataclasses.replace(REDUCED, t_global_rounds=T_ROUNDS)
 
 
-def sweep_overrides() -> tuple[list[dict], int]:
-    """The one fig7 grid: panel (a) points then panel (b) points.
+def sweep_overrides() -> tuple[list[dict], int, int]:
+    """The one fig7 grid: panel (a), then (b), then (c) consensus-zoo
+    points.
 
-    Returns (overrides, index where panel (b) starts).
+    Returns (overrides, index where panel (b) starts, index where panel
+    (c) starts).
     """
     ovs = [{"lp_device": 1.67 * imgs / 2400.0} for imgs in IMAGES]
-    split = len(ovs)
+    split_b = len(ovs)
     ovs += [{"consensus_mult": float(m), "k_edge_rounds": k}
             for m in CONS_MULTS for k in K_GRID]
-    return ovs, split
+    split_c = len(ovs)
+    ovs += [dict(p) for p in ZOO_POINTS]
+    return ovs, split_b, split_c
 
 
 def main() -> dict:
     out = {}
     csv = Csv("fig7_latency")
     s = _setting()
-    ovs, split = sweep_overrides()
+    ovs, split, split_c = sweep_overrides()
     # ONE compiled padded call — max_buckets=1 pins the documented fig7
     # protocol (and the E4 numbers) even though the K grid is shape-mixed
     # and default bucketing would split it into a few cheaper programs
@@ -83,7 +99,7 @@ def main() -> dict:
     lp = LatencyParams(T=T_ROUNDS, N=s.n_edges, J=s.j_per_edge)
     base_lbc = expected_consensus_latency(
         RaftParams(link_latency=s.link_latency), s.n_edges)
-    target = ACC_FRAC * float(sw.accuracy[split:].max())
+    target = ACC_FRAC * float(sw.accuracy[split:split_c].max())
     csv.row("consensus_latency_s", "k_star_theory", "k_star_empirical",
             "time_to_acc_s")
     for i, m in enumerate(CONS_MULTS):
@@ -98,6 +114,26 @@ def main() -> dict:
         csv.row(f"{lbc:.3f}", k_th, k_emp, f"{times[best]:.1f}")
         out[("kstar", round(lbc, 3))] = k_th
         out[("kstar_emp", round(lbc, 3))] = k_emp
+
+    # (c) consensus zoo: measured per-round energy off the engine's energy
+    # axis next to each protocol's closed-form expectations (the same
+    # forms the consensus_mc MC pins hold ≤5%; T=10 rounds here is a
+    # report, not a pin)
+    csv.row("consensus", "round_time_s", "energy_j_per_round",
+            "model_latency_s", "model_energy_j")
+    for i, ov in enumerate(ovs[split_c:]):
+        p = split_c + i
+        name = ov["consensus"]
+        spec = CONSENSUS_MODELS[name]
+        params = spec.make_params(s.link_latency, ov.get("n_shards", 2))
+        clock, energy = sw.energy_trajectory(p)
+        meas_t = float(clock[-1]) / len(clock)
+        meas_e = float(energy[-1]) / len(energy)
+        label = f"{name}/{ov['n_shards']}sh" if "n_shards" in ov else name
+        csv.row(label, f"{meas_t:.3f}", f"{meas_e:.3f}",
+                f"{spec.expected_latency(params, s.n_edges):.3f}",
+                f"{spec.expected_energy(params, s.n_edges):.3f}")
+        out[("zoo", label)] = meas_e
     csv.done()
     return out
 

@@ -38,6 +38,9 @@ def main() -> None:
                     help="comma-separated subset of " + ",".join(SUITES))
     ap.add_argument("--emit-json", action="store_true",
                     help="write BENCH_*.json (engine/sweep/latency/kernels)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale budget (latency suite; used by the "
+                         "bench-emission smoke test)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
     suites = dict(SUITES)
@@ -46,7 +49,8 @@ def main() -> None:
     suites["sweep"] = functools.partial(bench_sweep.main,
                                         emit_json=args.emit_json)
     suites["latency"] = functools.partial(bench_latency.main,
-                                          emit_json=args.emit_json)
+                                          emit_json=args.emit_json,
+                                          smoke=args.smoke)
     suites["kernels"] = functools.partial(kernel_bench.main,
                                           emit_json=args.emit_json)
     suites["population"] = functools.partial(bench_population.main,

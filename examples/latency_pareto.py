@@ -1,53 +1,61 @@
-"""Accuracy-vs-latency Pareto front: consensus delay × K, one bucketed sweep.
+"""Accuracy-vs-latency Pareto front: consensus protocol × delay × K, one
+bucketed sweep.
 
 The paper's central tension (Sec. 5): more edge rounds K converge faster
 per global round but stretch the wall clock, while the blockchain's
 consensus latency hides inside the K-round edge window only when the
 window is long enough (constraint C2).  The latency fabric lets us *map*
-that tradeoff empirically — a consensus-multiplier × K grid runs as ONE
-compiled sweep, every point carries a simulated-clock trajectory, and the
-accuracy-per-second Pareto front falls out.
+that tradeoff empirically — a consensus-zoo × multiplier × K grid runs as
+ONE compiled sweep (the protocol is a data-batched field, like the
+multiplier), every point carries simulated-clock AND consensus-energy
+trajectories, and the accuracy-per-second Pareto front falls out with the
+protocol's Joule bill beside it.
 
   PYTHONPATH=src python examples/latency_pareto.py
 """
 import dataclasses
 import itertools
 
-import numpy as np
-
 from repro.configs.bhfl_cnn import REDUCED
 from repro.fl import run_sweep
 
-CONS_MULTS = (1.0, 10.0, 40.0)
+CONSENSUS = ("raft", "pofel", "sharded")
+CONS_MULTS = (1.0, 40.0)
 K_GRID = (1, 2, 4)
 
 setting = dataclasses.replace(REDUCED, t_global_rounds=10)
-overrides = [{"consensus_mult": m, "k_edge_rounds": k}
-             for m, k in itertools.product(CONS_MULTS, K_GRID)]
+overrides = [{"consensus": c, "consensus_mult": m, "k_edge_rounds": k}
+             for c, m, k in itertools.product(CONSENSUS, CONS_MULTS, K_GRID)]
 sw = run_sweep(setting, overrides=overrides,
                n_train=1500, n_test=300, steps_per_epoch=2, normalize=True)
 
-# every point: (simulated seconds to finish, best accuracy reached)
+# every point: (simulated seconds, best accuracy, consensus Joules)
 cands = []
 for p, (ov, _seed) in enumerate(sw.points):
     clock, acc = sw.latency_trajectory(p)
-    cands.append((float(clock[-1]), float(acc.max()), ov))
+    _, energy = sw.energy_trajectory(p)
+    cands.append((float(clock[-1]), float(acc.max()), float(energy[-1]), ov))
 
-print("consensus_mult  K   sim_seconds  best_acc  acc_per_minute")
-for secs, acc, ov in cands:
-    print(f"{ov['consensus_mult']:14.0f}  {ov['k_edge_rounds']}  "
-          f"{secs:11.1f}  {acc:8.3f}  {60.0 * acc / secs:14.3f}")
+print("consensus  mult  K   sim_seconds  best_acc  acc_per_minute  energy_J")
+for secs, acc, joules, ov in cands:
+    print(f"{ov['consensus']:>9}  {ov['consensus_mult']:4.0f}  "
+          f"{ov['k_edge_rounds']}  {secs:11.1f}  {acc:8.3f}  "
+          f"{60.0 * acc / secs:14.3f}  {joules:8.2f}")
 
 # Pareto front: no other point is both faster and more accurate
-front = [(s, a, ov) for s, a, ov in cands
+front = [(s, a, e, ov) for s, a, e, ov in cands
          if not any(s2 < s and a2 >= a or (s2 <= s and a2 > a)
-                    for s2, a2, _ in cands)]
+                    for s2, a2, _, _ in cands)]
 front.sort(key=lambda c: (c[0], c[1]))
 print("\nPareto front (faster -> more accurate):")
-for secs, acc, ov in front:
-    print(f"  mult={ov['consensus_mult']:.0f} K={ov['k_edge_rounds']}: "
-          f"{acc:.3f} acc in {secs:.1f}s")
+for secs, acc, joules, ov in front:
+    print(f"  {ov['consensus']} mult={ov['consensus_mult']:.0f} "
+          f"K={ov['k_edge_rounds']}: {acc:.3f} acc in {secs:.1f}s "
+          f"({joules:.2f} J consensus)")
 best = max(cands, key=lambda c: c[1] / c[0])
-print(f"\nbest accuracy-per-second: mult={best[2]['consensus_mult']:.0f} "
-      f"K={best[2]['k_edge_rounds']} "
-      f"({len(sw.points)}-point grid, one bucketed sweep)")
+frugal = min(cands, key=lambda c: c[2])
+print(f"\nbest accuracy-per-second: {best[3]['consensus']} "
+      f"mult={best[3]['consensus_mult']:.0f} K={best[3]['k_edge_rounds']}")
+print(f"lowest consensus energy:  {frugal[3]['consensus']} "
+      f"({frugal[2]:.2f} J over {setting.t_global_rounds} rounds; "
+      f"{len(sw.points)}-point grid, one bucketed sweep)")

@@ -37,6 +37,12 @@ class BHFLSetting:
     lm_edge: float = 0.05           # E[LM'] edge<->leader one-way
     link_latency: float = 0.05      # Raft edge<->edge message (s)
     consensus_mult: float = 1.0     # scales the drawn per-round L_bc
+    # --- consensus zoo (repro.core.consensus).  Both are data-batched
+    # sweep fields: the protocol only changes the host-side chain replay
+    # feeding the cons_time/cons_energy planes, so a mixed-consensus grid
+    # compiles as one padded call.
+    consensus: str = "raft"         # "raft" | "pofel" | "sharded"
+    n_shards: int = 2               # sharded-chain committee count
     # --- delayed-gradient aggregation (aggregator="delayed_grad"; see
     # core.baselines.delayed_grad).  Data-batched sweep fields like the
     # latency constants: a staleness-discount grid is one compiled call.

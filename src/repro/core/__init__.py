@@ -5,9 +5,15 @@ from .hieavg import (History, init_history, update_history, edge_aggregate,
 from .baselines import fedavg, t_fedavg, d_fedavg, delayed_grad
 from .rng import STREAMS, stream_rng, stream_seed, stream_seq
 from .straggler import no_stragglers, permanent, temporary, from_fraction
-from .blockchain import (Block, RaftChain, RaftParams,
+from .blockchain import (Block, ConsensusChain, RaftChain, RaftParams,
+                         expected_consensus_energy,
                          expected_consensus_latency,
                          expected_election_latency)
+from .consensus import (CONSENSUS_MODELS, ConsensusSpec, PoFELChain,
+                        PoFELParams, ShardedChain, ShardedParams, make_chain,
+                        expected_pofel_energy, expected_pofel_latency,
+                        expected_round_energy, expected_round_latency,
+                        expected_sharded_energy, expected_sharded_latency)
 from .latency import (LatencyParams, shannon_rate, comm_latency,
                       compute_latency, total_latency, edge_window, optimize_k,
                       KOptResult, k_axis, total_latency_k, edge_window_k,
@@ -20,8 +26,14 @@ __all__ = [
     "fedavg", "t_fedavg", "d_fedavg", "delayed_grad",
     "STREAMS", "stream_rng", "stream_seed", "stream_seq",
     "no_stragglers", "permanent", "temporary", "from_fraction",
-    "Block", "RaftChain", "RaftParams",
-    "expected_consensus_latency", "expected_election_latency",
+    "Block", "ConsensusChain", "RaftChain", "RaftParams",
+    "expected_consensus_energy", "expected_consensus_latency",
+    "expected_election_latency",
+    "CONSENSUS_MODELS", "ConsensusSpec", "PoFELChain", "PoFELParams",
+    "ShardedChain", "ShardedParams", "make_chain",
+    "expected_pofel_energy", "expected_pofel_latency",
+    "expected_round_energy", "expected_round_latency",
+    "expected_sharded_energy", "expected_sharded_latency",
     "LatencyParams", "shannon_rate", "comm_latency", "compute_latency",
     "total_latency", "edge_window", "optimize_k", "KOptResult",
     "k_axis", "total_latency_k", "edge_window_k", "optimize_k_masked",

@@ -186,7 +186,12 @@ class EngineInputs:
     #   (2*LM + LP draws, straggler submissions delayed + deadline-capped;
     #   population mode folds the occupant's speed profile in)
     cons_time: jnp.ndarray    # [T] f32 — per-round consensus latency L_bc
-    #   (replayed RaftChain election + commit, scaled by consensus_mult)
+    #   (replayed consensus-chain election + commit — the zoo protocol the
+    #   setting names — scaled by consensus_mult)
+    cons_energy: jnp.ndarray  # [T] f32 — per-round consensus energy (J),
+    #   the chain's ``.energy`` differenced per round.  Zero on padded
+    #   rounds (the energy axis's padding inertness is bitwise); never
+    #   scaled by consensus_mult.
     edge_hop: jnp.ndarray     # scalar f32 — 2 * E[LM'] edge<->leader hop
     # --- population/cohort plane (PR 6): the engine's per-round arrays are
     # already COHORT-sized ([N, J] = the gathered cohort, not the
@@ -253,7 +258,7 @@ def merge_inputs(hot: dict, shared: dict) -> EngineInputs:
     return EngineInputs(**hot, **shared)
 
 
-def replay_chain(sim) -> np.ndarray:
+def replay_chain(sim) -> tuple[np.ndarray, np.ndarray]:
     """Replay the control plane exactly as the legacy loop interleaves it:
     elect → (maybe crash the leader) → commit, once per global round.
 
@@ -262,16 +267,20 @@ def replay_chain(sim) -> np.ndarray:
     stream is consumed in the same order, so the same leaders win).  The
     crash itself is applied at most once per simulator: a repeated
     ``run()`` replays the same failed edge instead of killing another
-    leader (which would eventually lose Raft quorum).
+    leader (which would eventually lose quorum).
 
-    Returns the per-round consensus latency ``[T]`` (election + block
-    commit elapsed simulated seconds) — the discrete-event draws the
-    engine's clock accounting consumes, so the jitted latency trajectory
-    stays pinned to the reference ``RaftChain``.
+    Returns ``(cons [T], energy [T])``: per-round consensus latency
+    (election + block commit elapsed simulated seconds) and per-round
+    consensus energy (the chain's cumulative ``.energy`` differenced per
+    round, Joules) — the discrete-event draws the engine's clock and
+    energy accounting consume, so the jitted trajectories stay pinned to
+    the reference chain (any ``repro.core.consensus`` protocol).
     """
     failed_edge: Optional[int] = getattr(sim, "_failed_leader", None)
     cons = np.zeros(sim.s.t_global_rounds, np.float64)
+    energy = np.zeros(sim.s.t_global_rounds, np.float64)
     for t in range(1, sim.s.t_global_rounds + 1):
+        e0 = sim.chain.energy
         _, t_elect = sim.chain.elect_leader()
         if (sim.fail_leader_at is not None and t == sim.fail_leader_at
                 and failed_edge is None):
@@ -284,7 +293,8 @@ def replay_chain(sim) -> np.ndarray:
             sim.edge_masks[t - 1:, failed_edge] = False
         _, t_commit = sim.chain.commit_block(f"edges@t={t}", f"global@t={t}")
         cons[t - 1] = t_elect + t_commit
-    return cons
+        energy[t - 1] = sim.chain.energy - e0
+    return cons, energy
 
 
 def build_inputs(sim, *, t_max: Optional[int] = None,
@@ -326,7 +336,7 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
             or (j_max is not None and j_max < max(sim.j_per_edge))):
         raise ValueError("pad targets must be >= the deployment's extents")
 
-    cons_draws = replay_chain(sim)
+    cons_draws, energy_draws = replay_chain(sim)
 
     dense_dev, valid = strag.stack_ragged(sim.dev_masks, j_max=j_max,
                                           n_max=Nm)
@@ -409,6 +419,10 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
             d += 1
     cons_time = np.zeros((Tm,), np.float32)
     cons_time[:T] = cons_draws * float(s.consensus_mult)
+    # energy is a protocol cost, not a latency knob: consensus_mult never
+    # scales it.  Padded rounds stay exactly 0.0 (bitwise-inert additions).
+    cons_energy = np.zeros((Tm,), np.float32)
+    cons_energy[:T] = energy_draws
 
     lr = np.zeros((Tm, Km), np.float32)
     lr[:T, :K] = np.asarray(
@@ -451,6 +465,7 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
         t_valid=jnp.int32(T), k_valid=jnp.int32(K),
         n_valid=jnp.int32(N), s_valid=jnp.int32(steps),
         dev_time=jnp.asarray(dev_time), cons_time=jnp.asarray(cons_time),
+        cons_energy=jnp.asarray(cons_energy),
         edge_hop=jnp.float32(2.0 * lp.lm_edge),
         cohort_change=jnp.asarray(cohort_change),
         agg_sel=jnp.int32(AGG_SEL.get(sim.aggregator, 0)),
@@ -463,11 +478,19 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
                  normalize: bool = False, history_dtype=None,
                  kernel_mode: str = "auto"
                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
-                            jnp.ndarray]:
+                            jnp.ndarray, jnp.ndarray]:
     """One whole BHFL run as a single compiled program.
 
     Returns per-global-round (accuracy [T], mean local loss [T],
-    global-model round-to-round delta norm [T], simulated clock [T]).
+    global-model round-to-round delta norm [T], simulated clock [T],
+    cumulative consensus energy [T] in Joules).
+
+    The energy row is the second traced cost axis beside the clock: the
+    per-round ``cons_energy`` draws (the replayed chain's ``.energy``
+    differenced per round — see ``replay_chain``) accumulate through the
+    scan carry exactly like the clock.  Padded rounds contribute a
+    bitwise-exact zero (the draw is 0.0 AND the carry passes through);
+    rounds past ``t_valid`` repeat the final cumulative value.
 
     The clock is the latency fabric's cumulative simulated seconds after
     each global round: per edge round the slowest valid device's time draw
@@ -564,8 +587,9 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
     def global_round(carry, xs):
         prev_carry = carry
         (device_w, ehist, elast, ghist, glast, prev_global, clock,
-         eage, gage) = carry
-        t, bidx_t, dmask_t, emask, lr_t, dtime_t, cons_t, chg_t = xs
+         eage, gage, energy) = carry
+        (t, bidx_t, dmask_t, emask, lr_t, dtime_t, cons_t, cons_en_t,
+         chg_t) = xs
 
         # ---- K edge rounds: local epoch + per-edge aggregation + sync
         def edge_round(c, xs_k):
@@ -734,10 +758,11 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
         t_ok = t <= inp.t_valid
         out_carry = passthru(t_ok, (device_w, ehist, elast, ghist, glast,
                                     global_w, clock + round_time,
-                                    eage, gage),
+                                    eage, gage, energy + cons_en_t),
                              prev_carry)
         return out_carry, (out_carry[5], jnp.where(t_ok, loss, 0.0),
-                           jnp.where(t_ok, delta, 0.0), out_carry[6])
+                           jnp.where(t_ok, delta, 0.0), out_carry[6],
+                           out_carry[9])
 
     # this run's row of the seed-major data plane (scalar gather per leaf —
     # the full train-set gather happens inside the batch indexing above)
@@ -753,11 +778,12 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
               init_w,
               jnp.float32(0.0),                        # simulated clock
               jnp.zeros((N, J), jnp.float32),   # delayed-grad edge ages
-              jnp.zeros((N,), jnp.float32))     # delayed-grad global ages
+              jnp.zeros((N,), jnp.float32),     # delayed-grad global ages
+              jnp.float32(0.0))                 # cumulative consensus J
     xs = (jnp.arange(1, T + 1), inp.batch_idx, inp.dev_masks,
           inp.edge_masks, inp.lr, inp.dev_time, inp.cons_time,
-          inp.cohort_change)
-    _, (globals_per_round, losses, deltas, clocks) = jax.lax.scan(
+          inp.cons_energy, inp.cohort_change)
+    _, (globals_per_round, losses, deltas, clocks, energies) = jax.lax.scan(
         global_round, carry0, xs)
     # test-set eval over the T round snapshots, outside the training scan.
     # lax.map (not vmap): one whole-test-set batched matmul per round with
@@ -770,7 +796,7 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
         lambda w: cnn_accuracy_fast(w, test_x, test_y,
                                     kernel_mode=kernel_mode),
         globals_per_round)
-    return accs, losses, deltas, clocks
+    return accs, losses, deltas, clocks, energies
 
 
 @partial(jax.jit, static_argnames=("aggregator", "normalize",
@@ -779,8 +805,10 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
                normalize: bool = False, history_dtype=None,
                kernel_mode: str = "auto"
                ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
-                          jnp.ndarray]:
-    """The standard jitted entry — see ``_engine_body`` for the contract.
+                          jnp.ndarray, jnp.ndarray]:
+    """The standard jitted entry — see ``_engine_body`` for the contract
+    (returns accuracy, loss, delta norm, simulated clock, cumulative
+    consensus energy — each ``[T]``).
 
     Input buffers are left intact (callers may reuse ``inp``); the
     donating twin is ``run_engine_donated``.
@@ -804,7 +832,7 @@ def run_engine_donated(inp: EngineInputs, *, aggregator: str = "hieavg",
                        normalize: bool = False, history_dtype=None,
                        kernel_mode: str = "auto"
                        ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
-                                  jnp.ndarray]:
+                                  jnp.ndarray, jnp.ndarray]:
     """``run_engine`` with the hot input planes DONATED to the program.
 
     Every ``EngineInputs`` field except the seed-major data plane

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.bhfl_cnn import BHFLSetting
-from repro.core import (RaftChain, RaftParams, baselines, hieavg,
+from repro.core import (baselines, consensus as _consensus, hieavg,
                         latency as lat, rng as rng_streams,
                         straggler as strag)
 from repro.kernels import dispatch as _kdispatch
@@ -80,6 +80,9 @@ class RunResult:
     #   seconds after each global round (latency fabric; engine path —
     #   pairs with ``accuracy`` into a time-to-accuracy curve).
     #   ``run_legacy`` leaves it None.
+    sim_energy: Optional[np.ndarray] = None  # [T] cumulative consensus
+    #   energy (J) after each global round — the second traced cost axis
+    #   (consensus zoo; engine path only, ``run_legacy`` leaves it None).
 
 
 # --------------------------------------------------------------- simulator
@@ -239,8 +242,9 @@ class BHFLSimulator:
         self.specs = cnn_specs(setting.image_hw, 1, setting.n_classes,
                                c1=setting.cnn_c1, c2=setting.cnn_c2)
         # ---- latency fabric: the Sec. 5 model for this deployment plus
-        # the Raft chain (link latency from the setting so consensus is a
-        # data-batched sweep field)
+        # the consensus chain (protocol, link latency, and shard count all
+        # come from the setting, so consensus is a data-batched sweep
+        # field — see repro.core.consensus)
         rate_mult = None
         if device_rates is not None:
             if self.pop is not None:
@@ -261,8 +265,9 @@ class BHFLSimulator:
             J=int(round(float(np.mean(self.j_per_edge)))),
             lm_device=setting.lm_device, lp_device=setting.lp_device,
             lm_edge=setting.lm_edge, rate_mult=rate_mult)
-        self.chain = RaftChain(
-            self.N, RaftParams(link_latency=setting.link_latency),
+        self.chain = _consensus.make_chain(
+            setting.consensus, self.N,
+            link_latency=setting.link_latency, n_shards=setting.n_shards,
             seed=rng_streams.stream_seed(self.seed, "chain"))
 
     # ----------------------------------------------------- population plane
@@ -360,11 +365,12 @@ class BHFLSimulator:
         # donated entry: the freshly built hot input planes are handed to
         # the compiled run for buffer reuse (they are rebuilt per call, so
         # nothing else holds them)
-        accs, losses, deltas, clock = _engine.run_engine_donated(
+        accs, losses, deltas, clock, energy = _engine.run_engine_donated(
             inp, aggregator=self.aggregator, normalize=self.normalize,
             history_dtype=self.history_dtype, kernel_mode=self.kernel_mode)
-        accs, losses, deltas, clock = (np.asarray(accs), np.asarray(losses),
-                                       np.asarray(deltas), np.asarray(clock))
+        accs, losses, deltas, clock, energy = (
+            np.asarray(accs), np.asarray(losses), np.asarray(deltas),
+            np.asarray(clock), np.asarray(energy))
         if progress:
             for t in range(1, self.s.t_global_rounds + 1):
                 if t % 10 == 0 or t == 1:
@@ -375,7 +381,8 @@ class BHFLSimulator:
             accuracy=accs, loss=losses, grad_norm=deltas,
             wall_time=time.time() - t0, sim_latency=self.paper_latency(),
             blocks=len(self.chain.blocks) - 1,
-            chain_valid=self.chain.validate(), sim_clock=clock)
+            chain_valid=self.chain.validate(), sim_clock=clock,
+            sim_energy=energy)
 
     # ---------------------------------------------------------- legacy run
     def run_legacy(self, progress: bool = False) -> RunResult:

@@ -84,11 +84,17 @@ from repro.launch.sharding import sweep_data_spec, sweep_spec
 #: The latency-fabric fields (lm_device/lp_device/lm_edge/link_latency/
 #: consensus_mult) batch because ``build_inputs`` bakes them into the
 #: ``dev_time``/``cons_time``/``edge_hop`` planes of ``EngineInputs`` —
-#: a consensus-latency x topology x K grid is ONE compiled call.
+#: a consensus-latency x topology x K grid is ONE compiled call.  The
+#: consensus-zoo fields (``consensus``/``n_shards``) batch the same way:
+#: the protocol only changes the host-side chain replay feeding the
+#: ``cons_time``/``cons_energy`` planes (unlike ``aggregation``, which
+#: needs the traced "switched" program), so a mixed raft/pofel/sharded
+#: grid is pure data.
 BATCHED_FIELDS = frozenset({
     "straggler_frac", "gamma0", "lam", "t_cold_boot", "classes_per_device",
     "lr0", "lr_decay", "permanent_stop_round", "seed",
     "lm_device", "lp_device", "lm_edge", "link_latency", "consensus_mult",
+    "consensus", "n_shards",
     "staleness_discount", "delay_delta",
 })
 
@@ -399,16 +405,18 @@ class SweepResult:
 
     Rows are padded to the grid's max round count: row ``p`` is valid up to
     ``t_valid[p]`` rounds; past that, ``accuracy`` repeats the final valid
-    value, ``loss``/``grad_norm`` are 0, and ``sim_clock`` repeats the
-    final valid clock.  ``trajectory(p)`` / ``latency_trajectory(p)`` slice
-    one point's valid prefix.  Rows are in original point order no matter
-    how the planner bucketed them.
+    value, ``loss``/``grad_norm`` are 0, and ``sim_clock``/``sim_energy``
+    repeat the final valid value.  ``trajectory(p)`` /
+    ``latency_trajectory(p)`` / ``energy_trajectory(p)`` slice one point's
+    valid prefix.  Rows are in original point order no matter how the
+    planner bucketed them.
     """
     points: list              # (overrides dict, seed) per grid point
     accuracy: np.ndarray      # [P, T_max]
     loss: np.ndarray          # [P, T_max]
     grad_norm: np.ndarray     # [P, T_max]
     sim_clock: np.ndarray     # [P, T_max] cumulative simulated seconds
+    sim_energy: np.ndarray    # [P, T_max] cumulative consensus energy (J)
     sim_latency: np.ndarray   # [P] paper's Sec. 5.1.4 expectation totals
     blocks: np.ndarray        # [P]
     t_valid: np.ndarray       # [P] real rounds per point
@@ -423,6 +431,12 @@ class SweepResult:
         time-to-accuracy curve (the latency fabric's x-axis)."""
         tv = int(self.t_valid[p])
         return self.sim_clock[p, :tv], self.accuracy[p, :tv]
+
+    def energy_trajectory(self, p: int) -> tuple[np.ndarray, np.ndarray]:
+        """(simulated clock [tv], cumulative consensus energy [tv] J) —
+        one point's energy-over-time curve (the zoo's second cost axis)."""
+        tv = int(self.t_valid[p])
+        return self.sim_clock[p, :tv], self.sim_energy[p, :tv]
 
     def time_to_accuracy(self, p: int, target: float) -> float:
         """Simulated seconds until point ``p`` first reaches ``target``
@@ -668,14 +682,16 @@ def _sharded_runner(aggregator: str, normalize: bool, history_dtype,
 
 def execute_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto",
                  donate: bool = True
-                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray,
+                            np.ndarray]:
     """Run a plan's buckets — one compiled call each — and merge outputs.
 
-    Returns per-point ``(accuracy, loss, grad_norm, sim_clock)``, each
-    ``[P, T_max]`` with ``T_max = plan.grid_max["t"]``, in original point
-    order.  Rows from a bucket padded to fewer rounds are extended by the
-    engine's own tail convention (accuracy/clock repeat the final value,
-    loss/grad are 0), so bucketing is invisible to every accessor.
+    Returns per-point ``(accuracy, loss, grad_norm, sim_clock,
+    sim_energy)``, each ``[P, T_max]`` with ``T_max = plan.grid_max["t"]``,
+    in original point order.  Rows from a bucket padded to fewer rounds
+    are extended by the engine's own tail convention (accuracy/clock/
+    energy repeat the final value, loss/grad are 0), so bucketing is
+    invisible to every accessor.
 
     ``placement``: ``"auto"`` shards each bucket's point axis over the mesh
     ``data`` axis when ``sweep_spec`` says it divides (falling back to
@@ -716,6 +732,7 @@ def execute_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto",
     loss = np.zeros((P_, Tg), np.float32)
     gn = np.zeros((P_, Tg), np.float32)
     clock = np.zeros((P_, Tg), np.float32)
+    energy = np.zeros((P_, Tg), np.float32)
     seed_shared = plan.n_seeds == 1
     for b, spec in zip(plan.buckets, specs):
         if b.inputs is None:
@@ -748,7 +765,7 @@ def execute_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto",
             # remains retryable
             b.inputs = None
         del hot
-        a, l, g, c = (np.asarray(o) for o in outs)
+        a, l, g, c, en = (np.asarray(o) for o in outs)
         ids = np.asarray(b.point_ids)
         Tb = a.shape[1]
         acc[ids, :Tb] = a
@@ -757,7 +774,9 @@ def execute_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto",
         gn[ids, :Tb] = g
         clock[ids, :Tb] = c
         clock[ids, Tb:] = c[:, -1:]
-    return acc, loss, gn, clock
+        energy[ids, :Tb] = en
+        energy[ids, Tb:] = en[:, -1:]
+    return acc, loss, gn, clock, energy
 
 
 def run_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto",
@@ -766,12 +785,12 @@ def run_plan(plan: SweepPlan, *, mesh=None, placement: str = "auto",
     inspect/log the bucket plan (``plan.describe()``) before running it.
     ``donate`` as in ``execute_plan`` (donated bucket inputs are consumed
     — pass False to keep the plan re-runnable)."""
-    accs, losses, deltas, clocks = execute_plan(plan, mesh=mesh,
-                                                placement=placement,
-                                                donate=donate)
+    accs, losses, deltas, clocks, energies = execute_plan(
+        plan, mesh=mesh, placement=placement, donate=donate)
     return SweepResult(
         points=plan.points,
         accuracy=accs, loss=losses, grad_norm=deltas, sim_clock=clocks,
+        sim_energy=energies,
         sim_latency=plan.sim_latency, blocks=plan.blocks,
         t_valid=plan.t_valid)
 

@@ -1,0 +1,52 @@
+"""Benchmark-emission smoke: the latency bench harness runs in-test.
+
+``benchmarks.run --only latency --emit-json --smoke`` must execute end to
+end at a seconds-scale budget and emit a schema-valid
+``BENCH_latency.json`` — including the consensus block the zoo added —
+so the artifact path can't rot silently between releases.
+"""
+import json
+import sys
+
+import numpy as np
+
+from benchmarks import run as bench_run
+from benchmarks.fig7_latency import ZOO_POINTS, sweep_overrides
+
+
+def test_fig7_grid_is_three_panels():
+    ovs, split_b, split_c = sweep_overrides()
+    assert 0 < split_b < split_c < len(ovs)
+    assert ovs[split_c:] == [dict(p) for p in ZOO_POINTS]
+    assert {p["consensus"] for p in ZOO_POINTS} == {"raft", "pofel",
+                                                    "sharded"}
+
+
+def test_latency_bench_smoke_emits_schema_valid_json(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(sys, "argv", ["run", "--only", "latency",
+                                      "--emit-json", "--smoke"])
+    bench_run.main()
+
+    data = json.loads((tmp_path / "BENCH_latency.json").read_text())
+    for key in ("setting", "grid", "points", "t_global_rounds",
+                "steps_per_epoch", "reps", "legacy_points_per_sec",
+                "sweep_points_per_sec", "sweep_speedup_vs_legacy",
+                "consensus"):
+        assert key in data, key
+    assert data["setting"] == "REDUCED"
+    assert data["points"] >= 1 and data["t_global_rounds"] >= 1
+    for key in ("legacy_points_per_sec", "sweep_points_per_sec",
+                "sweep_speedup_vs_legacy"):
+        assert np.isfinite(data[key]) and data[key] > 0, key
+
+    cons = data["consensus"]
+    assert set(cons) == {"raft", "pofel", "sharded"}
+    for name, row in cons.items():
+        for key in ("mc_latency_s", "expected_latency_s", "mc_energy_j",
+                    "expected_energy_j"):
+            assert np.isfinite(row[key]) and row[key] > 0, (name, key)
+        # smoke-budget MC (50 rounds): loose sanity, the real ≤5% pin is
+        # the consensus_mc suite's job
+        assert row["rel_err_latency"] <= 0.25, name
+        assert row["rel_err_energy"] <= 0.25, name

@@ -1,0 +1,276 @@
+"""The consensus zoo: pluggable protocols pinned by Monte-Carlo replay.
+
+A consensus model is a discrete-event ``ConsensusChain`` replay plus a
+closed-form expected-latency/energy pair (``repro.core.consensus``).  This
+suite holds the two halves together (property-based MC pins at ≤5% relative
+error, marker ``consensus_mc``), enforces the zoo-wide below-quorum raise,
+and pins the sweep-fabric composition: ``consensus``/``n_shards`` are
+data-batched fields, so mixed-protocol × aggregation × topology grids run
+as ONE padded compiled call with per-point ``sim_clock``/``sim_energy``
+parity against standalone runs — and the new energy axis is *bitwise* inert
+on padded extents.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.bhfl_cnn import REDUCED
+from repro.core import consensus as zoo
+from repro.core.blockchain import (RaftChain, RaftParams,
+                                   expected_consensus_energy,
+                                   expected_consensus_latency)
+from repro.fl import BHFLSimulator, run_sweep
+from repro.fl.engine import build_inputs, run_engine
+
+TINY = dataclasses.replace(REDUCED, t_global_rounds=3, n_edges=3,
+                           j_per_edge=3, image_hw=8)
+KW = dict(n_train=300, n_test=100, steps_per_epoch=2)
+
+MC_ROUNDS = 400     # elect+commit rounds per MC estimate (draws are iid)
+PIN_RTOL = 0.05     # the acceptance criterion: closed form within 5% of MC
+
+
+def _mc_round_costs(chain, rounds=MC_ROUNDS):
+    """Mean per-round (latency s, energy J) over ``rounds`` elect+commit
+    rounds — the exact sequence ``fl.engine.replay_chain`` drives."""
+    t0, e0 = chain.clock, chain.energy
+    for t in range(rounds):
+        chain.elect_leader()
+        chain.commit_block(f"edges@{t}", f"global@{t}")
+    return (chain.clock - t0) / rounds, (chain.energy - e0) / rounds
+
+
+def _kill_highest(chain, n_dead):
+    """Fail the ``n_dead`` highest ids — the prefix alive-set the sharded
+    closed forms assume (immaterial for raft/pofel)."""
+    for i in range(chain.n - n_dead, chain.n):
+        chain.fail_node(i)
+
+
+# ------------------------------------------------- MC vs closed-form pins
+@pytest.mark.consensus_mc
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(3, 9),
+       dead=st.integers(0, 4), link=st.floats(0.01, 0.2),
+       lo=st.floats(0.1, 0.3), w=st.floats(0.05, 0.3))
+def test_raft_mc_pins_closed_forms(*, seed, n, dead, link, lo, w):
+    dead = min(dead, (n - 1) // 2)          # stay at/above quorum
+    params = RaftParams(link_latency=link, election_timeout=(lo, lo + w))
+    chain = RaftChain(n, params, seed=seed)
+    _kill_highest(chain, dead)
+    lat, en = _mc_round_costs(chain)
+    a = n - dead
+    np.testing.assert_allclose(
+        lat, expected_consensus_latency(params, n, a), rtol=PIN_RTOL)
+    np.testing.assert_allclose(
+        en, expected_consensus_energy(params, n, a), rtol=PIN_RTOL)
+
+
+@pytest.mark.consensus_mc
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(3, 9),
+       dead=st.integers(0, 4), eval_time=st.floats(0.02, 0.2),
+       jitter=st.floats(0.05, 0.45), candidates=st.integers(1, 5))
+def test_pofel_mc_pins_closed_forms(*, seed, n, dead, eval_time, jitter,
+                                    candidates):
+    dead = min(dead, (n - 1) // 2)
+    params = zoo.PoFELParams(eval_time=eval_time, eval_jitter=jitter,
+                             n_candidates=candidates)
+    chain = zoo.PoFELChain(n, params, seed=seed)
+    _kill_highest(chain, dead)
+    lat, en = _mc_round_costs(chain)
+    a = n - dead
+    np.testing.assert_allclose(
+        lat, zoo.expected_pofel_latency(params, n, a), rtol=PIN_RTOL)
+    np.testing.assert_allclose(
+        en, zoo.expected_pofel_energy(params, n, a), rtol=PIN_RTOL)
+
+
+@pytest.mark.consensus_mc
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(3, 9),
+       shards=st.integers(1, 4), dead=st.integers(0, 3),
+       jitter=st.floats(0.05, 0.45))
+def test_sharded_mc_pins_closed_forms(*, seed, n, shards, dead, jitter):
+    """Per-shard quorum means a global majority is NOT always enough: when
+    the closed forms return inf for the prefix alive-set, the chain must
+    raise; otherwise the MC pins hold (energy is deterministic here)."""
+    dead = min(dead, (n - 1) // 2)
+    params = zoo.ShardedParams(n_shards=shards, intra_jitter=jitter)
+    chain = zoo.ShardedChain(n, params, seed=seed)
+    _kill_highest(chain, dead)
+    a = n - dead
+    want_lat = zoo.expected_sharded_latency(params, n, a)
+    want_en = zoo.expected_sharded_energy(params, n, a)
+    if not np.isfinite(want_lat):
+        with pytest.raises(RuntimeError, match="no majority alive"):
+            chain.elect_leader()
+        return
+    lat, en = _mc_round_costs(chain)
+    np.testing.assert_allclose(lat, want_lat, rtol=PIN_RTOL)
+    np.testing.assert_allclose(en, want_en, rtol=1e-6)
+
+
+@pytest.mark.consensus_mc
+def test_registry_builds_every_protocol_with_finite_expectations():
+    for name, spec in zoo.CONSENSUS_MODELS.items():
+        params = spec.make_params(0.07, 3)
+        assert isinstance(params, spec.params_cls)
+        chain = zoo.make_chain(name, 5, link_latency=0.07, n_shards=3)
+        assert isinstance(chain, spec.chain_cls)
+        assert np.isfinite(zoo.expected_round_latency(name, params, 5))
+        assert np.isfinite(zoo.expected_round_energy(name, params, 5))
+        # one full round works and accrues both cost axes
+        chain.elect_leader()
+        _, t = chain.commit_block("e", "g")
+        assert t > 0 and chain.energy > 0 and chain.validate()
+
+
+# -------------------------------------------------- below-quorum regression
+@pytest.mark.parametrize("name", sorted(zoo.CONSENSUS_MODELS))
+def test_below_quorum_raises_never_spins(name):
+    """Zoo-wide PR 3 guarantee: losing the majority raises immediately from
+    BOTH phases — no protocol may loop forever waiting for a quorum."""
+    chain = zoo.make_chain(name, 5)
+    for i in (2, 3, 4):          # alive prefix {0, 1} < the 3-node quorum
+        chain.fail_node(i)
+    with pytest.raises(RuntimeError, match="no majority alive"):
+        chain.elect_leader()
+
+    chain = zoo.make_chain(name, 5)
+    chain.elect_leader()
+    for i in (2, 3, 4):
+        chain.fail_node(i)
+    with pytest.raises(RuntimeError, match="no majority alive"):
+        chain.commit_block("e", "g")
+
+    # the closed forms agree: no finite expectation exists down there
+    params = zoo.CONSENSUS_MODELS[name].make_params(0.05, 2)
+    assert zoo.expected_round_latency(name, params, 5, 2) == float("inf")
+    assert zoo.expected_round_energy(name, params, 5, 2) == float("inf")
+
+
+def test_unknown_consensus_raises_naming_known_models():
+    with pytest.raises(ValueError, match="nakamoto.*raft.*sharded"):
+        zoo.make_chain("nakamoto", 5)
+    with pytest.raises(ValueError, match="consensus model"):
+        BHFLSimulator(dataclasses.replace(TINY, consensus="pow"),
+                      "hieavg", "temporary", "temporary", **KW)
+
+
+def test_wrong_params_class_raises():
+    with pytest.raises(TypeError, match="PoFELParams"):
+        zoo.make_chain("pofel", 5, params=RaftParams())
+
+
+# --------------------------------------------------- sweep-field composition
+def _check_point(sw, p, r):
+    tv = int(sw.t_valid[p])
+    np.testing.assert_allclose(sw.accuracy[p, :tv], r.accuracy, atol=1e-6)
+    np.testing.assert_allclose(sw.sim_clock[p, :tv], r.sim_clock, rtol=1e-5)
+    np.testing.assert_allclose(sw.sim_energy[p, :tv], r.sim_energy,
+                               atol=1e-6)
+
+
+def test_mixed_consensus_grid_matches_standalone_runs():
+    """The acceptance criterion: a mixed raft/pofel/sharded grid is ONE
+    compiled call — the protocol only changes the host-side chain replay —
+    with per-point clock AND energy parity against standalone runs."""
+    overrides = [{"consensus": "raft"}, {"consensus": "pofel"},
+                 {"consensus": "sharded"},
+                 {"consensus": "sharded", "n_shards": 3},
+                 {"consensus": "pofel", "consensus_mult": 100.0}]
+    sw = run_sweep(TINY, overrides=overrides, **KW)
+    assert sw.sim_energy.shape == sw.sim_clock.shape
+    for p, (ov, seed) in enumerate(sw.points):
+        s = dataclasses.replace(TINY, **ov)
+        r = BHFLSimulator(s, "hieavg", "temporary", "temporary", seed=seed,
+                          **KW).run()
+        _check_point(sw, p, r)
+    # the protocols genuinely differ on the energy axis, and energy is a
+    # strictly increasing cumulative cost for every one of them
+    assert not np.allclose(sw.sim_energy[0], sw.sim_energy[1])
+    for p in range(len(sw.points)):
+        clock, en = sw.energy_trajectory(p)
+        assert en[0] > 0 and np.all(np.diff(en) > 0)
+        assert clock.shape == en.shape
+    # consensus_mult scales the latency draws, NEVER the energy: points 1
+    # and 4 replay the identical pofel chain
+    np.testing.assert_array_equal(sw.sim_energy[4], sw.sim_energy[1])
+    assert sw.sim_clock[4, -1] > sw.sim_clock[1, -1]
+
+
+def test_consensus_composes_with_aggregation_switching():
+    """consensus (data-batched) × aggregation (traced-switched) in one
+    grid: per-point parity against standalone runs of the right
+    aggregator, padded path."""
+    overrides = [{"consensus": "pofel", "aggregation": "delayed_grad"},
+                 {"consensus": "sharded", "aggregation": "hieavg"},
+                 {"consensus": "raft", "aggregation": "delayed_grad"}]
+    sw = run_sweep(TINY, overrides=overrides, **KW)
+    for p, (ov, seed) in enumerate(sw.points):
+        ov = dict(ov)
+        agg = ov.pop("aggregation")
+        s = dataclasses.replace(TINY, **ov)
+        r = BHFLSimulator(s, agg, "temporary", "temporary", seed=seed,
+                          **KW).run()
+        _check_point(sw, p, r)
+
+
+def test_mixed_consensus_bucketed_matches_single_bucket_and_standalone():
+    """consensus × topology: shape-changing points bucket; bucketing stays
+    invisible to the energy axis exactly like the clock."""
+    overrides = [{"consensus": "pofel", "n_edges": 2},
+                 {"consensus": "sharded"},
+                 {"consensus": "raft", "k_edge_rounds": 1},
+                 {"consensus": "pofel", "t_global_rounds": 2}]
+    bucketed = run_sweep(TINY, overrides=overrides, max_buckets=3,
+                         bucket_waste=1.0, **KW)
+    single = run_sweep(TINY, overrides=overrides, max_buckets=1, **KW)
+    np.testing.assert_allclose(bucketed.sim_clock, single.sim_clock,
+                               rtol=1e-5)
+    np.testing.assert_allclose(bucketed.sim_energy, single.sim_energy,
+                               atol=1e-6)
+    for p, (ov, seed) in enumerate(bucketed.points):
+        s = dataclasses.replace(TINY, **ov)
+        r = BHFLSimulator(s, "hieavg", "temporary", "temporary", seed=seed,
+                          **KW).run()
+        _check_point(bucketed, p, r)
+    # ragged rounds: the energy tail freezes at the final valid value
+    tv = int(bucketed.t_valid[3])
+    assert tv == 2
+    np.testing.assert_array_equal(
+        bucketed.sim_energy[3, tv:],
+        np.repeat(bucketed.sim_energy[3, tv - 1],
+                  bucketed.sim_energy.shape[1] - tv))
+
+
+# --------------------------------------------------- energy-axis inertness
+def test_energy_axis_padding_is_bitwise_inert():
+    """Padded rounds contribute EXACTLY zero energy: the input plane
+    carries 0.0 past t_valid, and the scan carry passes through — padded
+    and unpadded runs agree bitwise, with the tail frozen."""
+    sim_a = BHFLSimulator(TINY, "hieavg", "temporary", "temporary", **KW)
+    sim_b = BHFLSimulator(TINY, "hieavg", "temporary", "temporary", **KW)
+    inp = build_inputs(sim_a)
+    pad = build_inputs(sim_b, t_max=5, k_max=4, n_max=5, j_max=6,
+                       steps_max=4)
+    T = TINY.t_global_rounds
+    np.testing.assert_array_equal(np.asarray(pad.cons_energy)[T:], 0.0)
+    np.testing.assert_array_equal(np.asarray(pad.cons_energy)[:T],
+                                  np.asarray(inp.cons_energy))
+    ea = np.asarray(run_engine(inp)[4])
+    eb = np.asarray(run_engine(pad)[4])
+    np.testing.assert_array_equal(eb[:T], ea)
+    np.testing.assert_array_equal(eb[T:], np.repeat(eb[T - 1], 5 - T))
+
+
+def test_consensus_mult_scales_the_clock_never_the_energy():
+    base = BHFLSimulator(TINY, "hieavg", "temporary", "temporary",
+                         **KW).run()
+    mult = BHFLSimulator(dataclasses.replace(TINY, consensus_mult=100.0),
+                         "hieavg", "temporary", "temporary", **KW).run()
+    np.testing.assert_array_equal(mult.sim_energy, base.sim_energy)
+    assert mult.sim_clock[-1] > base.sim_clock[-1]

@@ -241,7 +241,7 @@ def _fake_result(accs, clocks):
     P, T = accs.shape
     zeros = np.zeros_like(accs)
     return SweepResult(points=[({}, 0)] * P, accuracy=accs, loss=zeros,
-                       grad_norm=zeros, sim_clock=clocks,
+                       grad_norm=zeros, sim_clock=clocks, sim_energy=zeros,
                        sim_latency=np.zeros(P), blocks=np.zeros(P),
                        t_valid=np.full(P, T))
 
