@@ -1,0 +1,123 @@
+"""Fault-injection degradation curves — writes ``BENCH_faults.json``.
+
+The chaos plane's headline artifact: a fault_rate × consensus-protocol
+grid — edge crash–recover rates (MTBF/MTTR Markov processes) and
+chain-validator churn with bounded quorum stall-and-retry — compiled as
+ONE padded sweep call (every fault field is a data-batched sweep field,
+``repro.fl.sweep.BATCHED_FIELDS``), reporting per-protocol degradation
+curves: final accuracy, accuracy drop vs the protocol's clean baseline,
+and total simulated clock (stall backoff included via the traced C2
+accounting) as the fault rate rises.
+
+The validator-churn axis runs with ``max_stall_rounds`` headroom so
+transiently below-quorum rounds stall and recover instead of raising —
+the stall seconds are visible as the clock gap vs the clean baseline.
+
+  PYTHONPATH=src python -m benchmarks.run --only faults --emit-json
+
+``smoke=True`` (the ``--smoke`` flag, used by
+tests/test_bench_emission.py) shrinks the grid/rounds/data so the whole
+emission path runs in seconds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+from repro.configs.bhfl_cnn import REDUCED
+
+from .common import Csv
+
+T_ROUNDS = 10
+KW = dict(n_train=1500, n_test=300, steps_per_epoch=1, normalize=True)
+PROTOCOLS = ("raft", "pofel", "sharded")
+EDGE_RATES = (0.0, 0.1, 0.2, 0.4)     # with recover_rate=0.5 (MTTR 2 rounds)
+VAL_RATES = (0.1, 0.2)                # with recover_rate=0.8 + stall budget
+EDGE_RECOVER = 0.5
+VAL_RECOVER = 0.8
+STALL_ROUNDS = 5
+
+
+def _overrides(edge_rates, val_rates) -> list[dict]:
+    """The degradation grid: per protocol, a clean baseline (the 0.0 edge
+    rate), the edge crash-recover axis, and the validator-churn axis."""
+    out = []
+    for proto in PROTOCOLS:
+        for r in edge_rates:
+            out.append({"consensus": proto, "edge_fail_rate": r,
+                        "edge_recover_rate": EDGE_RECOVER})
+        for r in val_rates:
+            out.append({"consensus": proto, "val_fail_rate": r,
+                        "val_recover_rate": VAL_RECOVER,
+                        "max_stall_rounds": STALL_ROUNDS})
+    return out
+
+
+def main(emit_json: bool = True, smoke: bool = False) -> dict:
+    from repro.fl import sweep as _sweep
+
+    t_rounds = 3 if smoke else T_ROUNDS
+    kw = dict(KW, n_train=300, n_test=100) if smoke else KW
+    edge_rates = (0.0, 0.3) if smoke else EDGE_RATES
+    val_rates = (0.2,) if smoke else VAL_RATES
+    setting = dataclasses.replace(REDUCED, t_global_rounds=t_rounds)
+    overrides = _overrides(edge_rates, val_rates)
+
+    csv = Csv("bench_faults")
+    csv.row("protocol", "axis", "rate", "final_acc", "acc_drop",
+            "final_clock_s")
+
+    t0 = time.time()
+    plan = _sweep.plan_sweep(setting, overrides=overrides, **kw)
+    res = _sweep.run_plan(plan)
+    elapsed = time.time() - t0
+
+    # per-protocol curves: index the result rows back by their overrides
+    curves: dict = {p: {"edge_fail": [], "val_fail": []} for p in PROTOCOLS}
+    base_acc: dict = {}
+    for p, (ov, _seed) in enumerate(res.points):
+        clock, acc = res.latency_trajectory(p)
+        if ov.get("edge_fail_rate", 0.0) == 0.0 and "val_fail_rate" not in ov:
+            base_acc[ov["consensus"]] = float(acc[-1])
+    for p, (ov, _seed) in enumerate(res.points):
+        proto = ov["consensus"]
+        clock, acc = res.latency_trajectory(p)
+        axis = "val_fail" if "val_fail_rate" in ov else "edge_fail"
+        rate = ov.get("val_fail_rate", ov.get("edge_fail_rate", 0.0))
+        row = {
+            "rate": float(rate),
+            "final_acc": round(float(acc[-1]), 4),
+            "acc_drop": round(base_acc[proto] - float(acc[-1]), 4),
+            "final_clock_s": round(float(clock[-1]), 3),
+        }
+        curves[proto][axis].append(row)
+        csv.row(proto, axis, f"{rate:.2f}", f"{row['final_acc']:.4f}",
+                f"{row['acc_drop']:.4f}", f"{row['final_clock_s']:.1f}")
+    for proto in curves:
+        for axis in curves[proto]:
+            curves[proto][axis].sort(key=lambda r: r["rate"])
+
+    out = {
+        "setting": "REDUCED",
+        "t_global_rounds": t_rounds,
+        "points": len(res.points),
+        "buckets": len(plan.buckets),         # the one-padded-call claim
+        "seconds": round(elapsed, 2),
+        "edge_recover_rate": EDGE_RECOVER,
+        "val_recover_rate": VAL_RECOVER,
+        "max_stall_rounds": STALL_ROUNDS,
+        "protocols": list(PROTOCOLS),
+        "curves": curves,
+    }
+    if emit_json:
+        with open("BENCH_faults.json", "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote BENCH_faults.json ({len(res.points)} fault points "
+              f"in {len(plan.buckets)} compiled call(s), {elapsed:.1f}s)")
+    csv.done()
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -11,8 +11,8 @@ import argparse
 import functools
 import time
 
-from . import (ablations, bench_engine, bench_latency, bench_population,
-               bench_sweep, fig2_convergence, fig3_sweeps,
+from . import (ablations, bench_engine, bench_faults, bench_latency,
+               bench_population, bench_sweep, fig2_convergence, fig3_sweeps,
                fig4_heterogeneity, fig56_single_layer, fig7_latency,
                kernel_bench, roofline)
 
@@ -29,6 +29,7 @@ SUITES = {
     "sweep": bench_sweep.main,
     "latency": bench_latency.main,
     "population": bench_population.main,
+    "faults": bench_faults.main,
 }
 
 
@@ -39,8 +40,8 @@ def main() -> None:
     ap.add_argument("--emit-json", action="store_true",
                     help="write BENCH_*.json (engine/sweep/latency/kernels)")
     ap.add_argument("--smoke", action="store_true",
-                    help="seconds-scale budget (latency suite; used by the "
-                         "bench-emission smoke test)")
+                    help="seconds-scale budget (latency/faults suites; used "
+                         "by the bench-emission smoke test)")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(SUITES)
     suites = dict(SUITES)
@@ -55,6 +56,9 @@ def main() -> None:
                                           emit_json=args.emit_json)
     suites["population"] = functools.partial(bench_population.main,
                                              emit_json=args.emit_json)
+    suites["faults"] = functools.partial(bench_faults.main,
+                                         emit_json=args.emit_json,
+                                         smoke=args.smoke)
     t0 = time.time()
     for name in names:
         suites[name]()

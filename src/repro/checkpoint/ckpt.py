@@ -43,9 +43,13 @@ def save_checkpoint(directory: str, step: int, tree: PyTree,
     os.replace(tmp, path)
     if metadata is not None:
         mpath = path.replace(".npz", ".json")
-        with open(mpath + ".tmp", "w") as f:
+        # mkstemp like the npz write above: a fixed "<mpath>.tmp" name
+        # lets two concurrent writers clobber each other's half-written
+        # sidecar before either rename lands
+        fd, mtmp = tempfile.mkstemp(dir=directory, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
             json.dump(metadata, f)
-        os.replace(mpath + ".tmp", mpath)
+        os.replace(mtmp, mpath)
     return path
 
 

@@ -49,6 +49,26 @@ class BHFLSetting:
     staleness_discount: float = 0.9  # beta — stale update weight beta**k'
     delay_delta: int = 1            # max consecutive-miss staleness; k' >
     #   delta drops the slot from the round's aggregate entirely
+    # --- fault plane (repro.fl.faults).  All data-batched sweep fields:
+    # faults only change host-side planes (submission masks, the replayed
+    # chain's alive set and cons_time/cons_energy draws), never array
+    # shapes, so a fault-rate x consensus grid compiles as one padded call.
+    # Rates are per-round transition probabilities of two-state Markov
+    # crash-recover processes (rate = 1/MTBF resp. 1/MTTR in rounds).
+    edge_fail_rate: float = 0.0     # P[edge up -> down] per global round
+    edge_recover_rate: float = 0.0  # P[edge down -> up]; 0 = never recover
+    val_fail_rate: float = 0.0      # P[chain validator up -> down] per tick
+    val_recover_rate: float = 0.0   # P[validator down -> up] per tick
+    burst_prob: float = 0.0         # P[correlated device-outage burst] per
+    #   (global round, edge): a burst masks burst_frac of the edge's
+    #   devices out for that whole round
+    burst_frac: float = 0.5         # fraction of devices a burst takes out
+    msg_loss_prob: float = 0.0      # P[a submission message is lost], iid
+    #   per device edge-round submission and per edge global submission
+    max_stall_rounds: int = 0       # below-quorum consensus: bounded
+    #   stall-and-retry attempts before raising (0 = immediate raise)
+    stall_backoff: float = 0.5      # seconds of backoff for the first
+    #   stall retry; doubles per attempt (C2-style stall in the clock)
 
 
 DEFAULT = BHFLSetting()

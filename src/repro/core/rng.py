@@ -39,6 +39,8 @@ STREAMS = (
     "chain",       # Raft election/commit timing
     "population",  # device-population profile synthesis
     "cohort",      # per-round cohort sampling
+    "faults",      # fault-injection schedules (edge/validator churn, bursts,
+    #                message loss) — see repro.fl.faults
 )
 _POS = {name: i for i, name in enumerate(STREAMS)}
 

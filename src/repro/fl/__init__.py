@@ -1,4 +1,5 @@
 from .engine import EngineInputs, build_inputs, run_engine
+from .faults import FaultSchedule, FaultSpec, compile_schedule
 from .population import DevicePopulation, PopulationSpec
 from .simulator import BHFLSimulator, RunResult, run_comparison
 from .sweep import (SweepBucket, SweepPlan, SweepResult, execute_plan,
@@ -6,6 +7,7 @@ from .sweep import (SweepBucket, SweepPlan, SweepResult, execute_plan,
 
 __all__ = ["BHFLSimulator", "RunResult", "run_comparison",
            "EngineInputs", "build_inputs", "run_engine",
+           "FaultSpec", "FaultSchedule", "compile_schedule",
            "DevicePopulation", "PopulationSpec",
            "SweepBucket", "SweepPlan", "SweepResult", "execute_plan",
            "plan_sweep", "run_plan", "run_sweep"]

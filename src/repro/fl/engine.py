@@ -64,6 +64,7 @@ from repro.core import latency as lat
 from repro.core import rng as rng_streams
 from repro.core import straggler as strag
 from repro.data import partition
+from repro.fl import faults as _faults
 from repro.kernels import dispatch as kernel_dispatch
 from repro.models import (cnn_accuracy_fast, cnn_loss, cnn_loss_fast,
                           init_from_specs)
@@ -258,43 +259,59 @@ def merge_inputs(hot: dict, shared: dict) -> EngineInputs:
     return EngineInputs(**hot, **shared)
 
 
-def replay_chain(sim) -> tuple[np.ndarray, np.ndarray]:
+def replay_chain(sim) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Replay the control plane exactly as the legacy loop interleaves it:
-    elect → (maybe crash the leader) → commit, once per global round.
+    elect → (maybe crash the leader) → commit, once per global round —
+    now under the deployment's fault schedule (``repro.fl.faults``).
 
-    Mutates ``sim.chain`` and — on leader failure — ``sim.edge_masks``
-    in place, identically to ``BHFLSimulator.run_legacy`` (the chain RNG
-    stream is consumed in the same order, so the same leaders win).  The
-    crash itself is applied at most once per simulator: a repeated
-    ``run()`` replays the same failed edge instead of killing another
-    leader (which would eventually lose quorum).
+    Per round, the schedule's churn planes are diff-applied onto the
+    chain's alive set (``fail_node``/``recover_node``) before the protocol
+    round runs, so alive counts — and with them latency and energy — vary
+    over rounds; a below-quorum round runs the schedule's bounded
+    stall-and-retry policy (``faults.stalled_round``), with the backoff
+    landing in that round's consensus-latency draw (the engine's C2 stall
+    accounting picks it up).  Mutates only ``sim.chain`` (plus the
+    ``sim._failed_leader`` crash memo); ``sim.edge_masks`` is never
+    touched — the failover/outage mask is *derived* per replay, so a
+    repeated ``run()`` is bitwise repeatable under a leader crash.  The
+    chain RNG stream is consumed in the same order as the legacy loop
+    (an inert schedule adds zero draws), so the same leaders win.  The
+    ``fail_leader_at`` crash is applied at most once per simulator: a
+    repeated ``run()`` replays the same failed edge instead of killing
+    another leader (which would eventually lose quorum).
 
-    Returns ``(cons [T], energy [T])``: per-round consensus latency
-    (election + block commit elapsed simulated seconds) and per-round
-    consensus energy (the chain's cumulative ``.energy`` differenced per
-    round, Joules) — the discrete-event draws the engine's clock and
-    energy accounting consume, so the jitted trajectories stay pinned to
-    the reference chain (any ``repro.core.consensus`` protocol).
+    Returns ``(cons [T], energy [T], edge_avail [T, N])``: per-round
+    consensus latency (election + commit + any stall backoff, simulated
+    seconds) and consensus energy (the chain's cumulative ``.energy``
+    differenced per round, Joules) — the discrete-event draws the engine's
+    clock and energy accounting consume — plus the derived per-round edge
+    availability (crashed leader from its crash round on, scheduled edge
+    outages, lost global submissions) that ``build_inputs`` ANDs into the
+    ``edge_masks`` plane.
     """
+    sched = sim.fault_schedule
+    crash_at = sched.spec.leader_crash_round
     failed_edge: Optional[int] = getattr(sim, "_failed_leader", None)
-    cons = np.zeros(sim.s.t_global_rounds, np.float64)
-    energy = np.zeros(sim.s.t_global_rounds, np.float64)
-    for t in range(1, sim.s.t_global_rounds + 1):
-        e0 = sim.chain.energy
-        _, t_elect = sim.chain.elect_leader()
-        if (sim.fail_leader_at is not None and t == sim.fail_leader_at
-                and failed_edge is None):
-            failed_edge = sim.chain.leader
-            sim.chain.fail_node(failed_edge)
-            sim._failed_leader = failed_edge
-        if failed_edge is not None and t >= sim.fail_leader_at:
-            # only from the crash round on — a repeated replay must not
-            # widen the outage to earlier rounds
-            sim.edge_masks[t - 1:, failed_edge] = False
-        _, t_commit = sim.chain.commit_block(f"edges@t={t}", f"global@t={t}")
-        cons[t - 1] = t_elect + t_commit
-        energy[t - 1] = sim.chain.energy - e0
-    return cons, energy
+    T = sim.s.t_global_rounds
+    cons = np.zeros(T, np.float64)
+    energy = np.zeros(T, np.float64)
+    pinned = set() if failed_edge is None else {failed_edge}
+    for t in range(1, T + 1):
+        crash = crash_at is not None and t == crash_at and failed_edge is None
+        elapsed, de, _, crashed = _faults.stalled_round(
+            sim.chain, t, sched, pinned_down=pinned, crash_leader=crash)
+        if crashed is not None:
+            failed_edge = crashed
+            sim._failed_leader = crashed
+            pinned.add(crashed)
+        cons[t - 1] = elapsed
+        energy[t - 1] = de
+    edge_avail = ~sched.edge_down & ~sched.edge_msg_drop    # [T, N]
+    if failed_edge is not None:
+        # from the crash round on — same extent the old in-place mutation
+        # produced, but derived fresh per replay
+        edge_avail[crash_at - 1:, failed_edge] = False
+    return cons, energy, edge_avail
 
 
 def build_inputs(sim, *, t_max: Optional[int] = None,
@@ -336,15 +353,33 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
             or (j_max is not None and j_max < max(sim.j_per_edge))):
         raise ValueError("pad targets must be >= the deployment's extents")
 
-    cons_draws, energy_draws = replay_chain(sim)
+    cons_draws, energy_draws, edge_avail = replay_chain(sim)
 
     dense_dev, valid = strag.stack_ragged(sim.dev_masks, j_max=j_max,
                                           n_max=Nm)
     J = valid.shape[1]
+    # ---- fault plane (repro.fl.faults): a down edge trains nothing (all
+    # its device submissions cleared for the round's K edge rounds — the
+    # edge-layer HieAvg miss_counts span the outage exactly like the
+    # global layer's), and a burst/lost-message device misses its edge
+    # round.  Both fold into the submission masks BEFORE the latency
+    # computation, so a dropped submission is deadline-capped exactly
+    # like a straggler miss.  The inert schedule skips the folding (and
+    # the copy) entirely — bitwise parity with the pre-chaos path.
+    sched = sim.fault_schedule
+    if sched.edge_down.any() or sched.dev_drop.any():
+        dense_dev = dense_dev.copy()
+        if sched.edge_down.any():
+            ed = np.repeat(sched.edge_down, K, axis=0)       # [T*K, N]
+            dense_dev[:T * K, :N] &= ~ed[:, :, None]
+        if sched.dev_drop.any():
+            dd = sched.dev_drop                              # [T*K, N, Js]
+            dense_dev[:T * K, :N, :dd.shape[2]] &= ~dd
     dev_masks = np.zeros((Tm, Km, Nm, J), dtype=bool)
     dev_masks[:T, :K] = dense_dev[:T * K].reshape(T, K, Nm, J)
     edge_masks = np.zeros((Tm, Nm), dtype=bool)
-    edge_masks[:T, :N] = np.asarray(sim.edge_masks[:T], dtype=bool)
+    edge_masks[:T, :N] = np.asarray(sim.edge_masks[:T], dtype=bool) \
+        & edge_avail
 
     # batch indices in legacy order: per edge-round, per device.  The
     # fresh generator rides the deployment's "batches" SeedSequence stream
@@ -474,9 +509,68 @@ def build_inputs(sim, *, t_max: Optional[int] = None,
 
 
 # ------------------------------------------------------------- jitted run
+def _bcast_edges_tree(tree: PyTree, n: int) -> PyTree:
+    """Broadcast a global model to per-edge copies: [...] -> [N, ...]."""
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+
+def _bcast_devices_tree(tree: PyTree, n: int, j: int) -> PyTree:
+    """Broadcast edge models to device slots: [N, ...] -> [N, J, ...]."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[:, None], (n, j) + x.shape[1:]), tree)
+
+
+def init_engine_carry(inp: EngineInputs, history_dtype=None) -> tuple:
+    """The engine scan's round-zero carry (the full cross-round state:
+    device/edge/global models, both HieAvg histories, the d_fedavg /
+    delayed-grad stores and ages, the simulated clock, and the cumulative
+    consensus energy).
+
+    Extracted from ``_engine_body`` so chunked execution
+    (``run_engine_chunk`` / ``BHFLSimulator.run_checkpointed``) can build
+    the same round-zero state outside the jit, checkpoint a mid-run carry,
+    and feed it back — the carry IS the whole resume state.  Values are
+    identical to the inline construction (broadcasts and zeros are exact).
+    """
+    N, J = inp.dev_masks.shape[2:]
+    init_w = jax.tree.map(lambda v: v[inp.seed_idx], inp.init_w)
+    edge0 = _bcast_edges_tree(init_w, N)
+    dev0 = _bcast_devices_tree(edge0, N, J)
+    return (dev0,
+            hieavg.init_history_batched(dev0, history_dtype),  # @r==0
+            jax.tree.map(jnp.zeros_like, dev0),      # d_fedavg last /
+            #   delayed_grad pending stores (mutually exclusive users)
+            hieavg.init_history(edge0, history_dtype),         # @t==1
+            jax.tree.map(jnp.zeros_like, edge0),
+            init_w,
+            jnp.float32(0.0),                        # simulated clock
+            jnp.zeros((N, J), jnp.float32),   # delayed-grad edge ages
+            jnp.zeros((N,), jnp.float32),     # delayed-grad global ages
+            jnp.float32(0.0))                 # cumulative consensus J
+
+
+#: ``EngineInputs`` fields with a leading global-round (T) axis — what
+#: ``slice_rounds`` cuts per chunk for resumable execution.
+ROUND_FIELDS = ("batch_idx", "dev_masks", "edge_masks", "lr", "dev_time",
+                "cons_time", "cons_energy", "cohort_change")
+
+
+def slice_rounds(inp: EngineInputs, t0: int, t1: int) -> EngineInputs:
+    """A view of ``inp`` restricted to global rounds ``t0..t1-1`` (0-based
+    rows of the T-leading planes).  Scalars — including the GLOBAL
+    ``t_valid`` — ride along unchanged: the engine's round conditions
+    (cold boot, history init, validity) compare against absolute round
+    numbers, which is what makes chunked execution bitwise-composable."""
+    return dataclasses.replace(
+        inp, **{f: getattr(inp, f)[t0:t1] for f in ROUND_FIELDS})
+
+
 def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
                  normalize: bool = False, history_dtype=None,
-                 kernel_mode: str = "auto"
+                 kernel_mode: str = "auto",
+                 carry0: Optional[tuple] = None,
+                 t_start: Optional[jnp.ndarray] = None,
+                 with_carry: bool = False
                  ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
                             jnp.ndarray, jnp.ndarray]:
     """One whole BHFL run as a single compiled program.
@@ -764,27 +858,18 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
                            jnp.where(t_ok, delta, 0.0), out_carry[6],
                            out_carry[9])
 
-    # this run's row of the seed-major data plane (scalar gather per leaf —
-    # the full train-set gather happens inside the batch indexing above)
-    init_w = jax.tree.map(lambda v: v[inp.seed_idx], inp.init_w)
-    edge0 = bcast_edges(init_w)
-    dev0 = bcast_devices(edge0)
-    carry0 = (dev0,
-              hieavg.init_history_batched(dev0, history_dtype),  # @r==0
-              jax.tree.map(jnp.zeros_like, dev0),      # d_fedavg last /
-              #   delayed_grad pending stores (mutually exclusive users)
-              hieavg.init_history(edge0, history_dtype),         # @t==1
-              jax.tree.map(jnp.zeros_like, edge0),
-              init_w,
-              jnp.float32(0.0),                        # simulated clock
-              jnp.zeros((N, J), jnp.float32),   # delayed-grad edge ages
-              jnp.zeros((N,), jnp.float32),     # delayed-grad global ages
-              jnp.float32(0.0))                 # cumulative consensus J
-    xs = (jnp.arange(1, T + 1), inp.batch_idx, inp.dev_masks,
+    # round-zero carry unless resuming a chunked run (the carry IS the
+    # whole cross-round state — see init_engine_carry); the scanned round
+    # numbers are GLOBAL (t_start-offset), so cold boot / history-init /
+    # validity conditions are chunk-invariant
+    if carry0 is None:
+        carry0 = init_engine_carry(inp, history_dtype)
+    t0 = jnp.int32(0) if t_start is None else t_start
+    xs = (t0 + jnp.arange(1, T + 1), inp.batch_idx, inp.dev_masks,
           inp.edge_masks, inp.lr, inp.dev_time, inp.cons_time,
           inp.cons_energy, inp.cohort_change)
-    _, (globals_per_round, losses, deltas, clocks, energies) = jax.lax.scan(
-        global_round, carry0, xs)
+    final_carry, (globals_per_round, losses, deltas, clocks, energies) = \
+        jax.lax.scan(global_round, carry0, xs)
     # test-set eval over the T round snapshots, outside the training scan.
     # lax.map (not vmap): one whole-test-set batched matmul per round with
     # round-at-a-time peak memory — vmapping all T rounds through the 9x
@@ -796,6 +881,8 @@ def _engine_body(inp: EngineInputs, *, aggregator: str = "hieavg",
         lambda w: cnn_accuracy_fast(w, test_x, test_y,
                                     kernel_mode=kernel_mode),
         globals_per_round)
+    if with_carry:
+        return (accs, losses, deltas, clocks, energies), final_carry
     return accs, losses, deltas, clocks, energies
 
 
@@ -815,6 +902,29 @@ def run_engine(inp: EngineInputs, *, aggregator: str = "hieavg",
     """
     return _engine_body(inp, aggregator=aggregator, normalize=normalize,
                         history_dtype=history_dtype, kernel_mode=kernel_mode)
+
+
+@partial(jax.jit, static_argnames=("aggregator", "normalize",
+                                   "history_dtype", "kernel_mode"))
+def run_engine_chunk(inp: EngineInputs, carry: tuple, t_start: jnp.ndarray,
+                     *, aggregator: str = "hieavg", normalize: bool = False,
+                     history_dtype=None, kernel_mode: str = "auto"
+                     ) -> tuple[tuple, tuple]:
+    """Run a contiguous segment of global rounds and return the carry.
+
+    ``inp`` is a ``slice_rounds`` view covering rounds ``t_start..t_start+C``
+    (0-based), ``carry`` the scan state after round ``t_start`` (round zero:
+    ``init_engine_carry``).  Returns ``((acc, loss, delta, clock, energy)
+    each [C], new_carry)``.  ``t_start`` is TRACED, so every equal-length
+    chunk of a run shares one compiled program; running the chunks back to
+    back is the same per-round op sequence as one full-length scan, and
+    feeding a checkpointed carry back in resumes bitwise (the carry is the
+    entire cross-round state — ``BHFLSimulator.run_checkpointed`` builds
+    the round-level checkpoint/resume loop on top of this).
+    """
+    return _engine_body(inp, aggregator=aggregator, normalize=normalize,
+                        history_dtype=history_dtype, kernel_mode=kernel_mode,
+                        carry0=carry, t_start=t_start, with_carry=True)
 
 
 @partial(jax.jit, static_argnames=("aggregator", "normalize",

@@ -45,7 +45,10 @@ from repro.data import by_class, class_images, class_pools
 from repro.models import cnn_accuracy, cnn_specs, init_from_specs
 from repro.optim import paper_lr
 
+from repro.checkpoint import ckpt as _ckpt
+
 from . import engine as _engine
+from . import faults as _faults
 from . import population as _population
 
 PyTree = Any
@@ -103,11 +106,25 @@ class BHFLSimulator:
                  kernel_mode: str = "auto",
                  population=None,
                  j_cohort: Optional[int] = None,
-                 device_rates: Optional[list] = None):
+                 device_rates: Optional[list] = None,
+                 faults: Optional[_faults.FaultSpec] = None):
         """``fail_leader_at``: global round at which the current Raft
         leader crashes — the paper's single-point-of-failure scenario.
         The consortium re-elects and training continues (the failed edge
-        also becomes a permanent straggler at the global layer).
+        also becomes a permanent straggler at the global layer).  Since
+        the chaos plane landed this is sugar for a one-event
+        ``FaultSpec(leader_crash_round=...)`` — it rides the fault
+        schedule, parity-pinned bitwise against the scripted path.
+
+        ``faults``: an explicit ``repro.fl.faults.FaultSpec`` overriding
+        the setting's fault fields (``edge_fail_rate`` …
+        ``stall_backoff``), from which the per-round fault schedule is
+        compiled by default.  The schedule draws from the deployment's
+        dedicated ``"faults"`` RNG stream (an all-zero spec is
+        draw-free) and is pure data: it feeds the chain replay (validator
+        churn, quorum stall-and-retry) and the engine's submission/edge
+        masks (outages, bursts, message loss).  Engine path only —
+        ``run_legacy`` refuses stochastic fault processes.
 
         ``history_dtype``: HieAvg history storage dtype override (engine
         path only) — straggler estimation keeps two extra model copies
@@ -269,6 +286,24 @@ class BHFLSimulator:
             setting.consensus, self.N,
             link_latency=setting.link_latency, n_shards=setting.n_shards,
             seed=rng_streams.stream_seed(self.seed, "chain"))
+        # ---- fault plane (repro.fl.faults): the declarative spec comes
+        # from the setting's fault fields unless passed explicitly;
+        # fail_leader_at rides the spec as its one-event leader-crash
+        # schedule.  Compiled once into per-round event planes on the
+        # dedicated "faults" stream — the engine and the chain replay
+        # consume the planes as data.
+        if faults is None:
+            faults = _faults.FaultSpec.from_setting(
+                setting, leader_crash_round=fail_leader_at)
+        elif faults.leader_crash_round is None and fail_leader_at is not None:
+            faults = dataclasses.replace(faults,
+                                         leader_crash_round=fail_leader_at)
+        self.fault_spec = faults
+        self.fail_leader_at = faults.leader_crash_round
+        self.fault_schedule = _faults.compile_schedule(
+            faults, t_rounds=setting.t_global_rounds,
+            k_rounds=setting.k_edge_rounds, n_edges=self.N,
+            j_per_edge=list(self.j_per_edge), seed=self.seed)
 
     # ----------------------------------------------------- population plane
     def _population_schedules(self, rounds: int, device_stragglers: str
@@ -384,6 +419,78 @@ class BHFLSimulator:
             chain_valid=self.chain.validate(), sim_clock=clock,
             sim_energy=energy)
 
+    # ------------------------------------------------- checkpointed run
+    def run_checkpointed(self, ckpt_dir: str, *, every: int = 10,
+                         resume: bool = True,
+                         progress: bool = False) -> RunResult:
+        """``run()`` in resumable segments of ``every`` global rounds,
+        checkpointing after each one (``repro.checkpoint.ckpt`` — atomic
+        npz of the engine scan carry plus the per-round outputs so far).
+
+        A killed run restarts from the latest surviving checkpoint and
+        finishes **bitwise-identically** to the uninterrupted call: the
+        carry is the engine's entire cross-round state, every segment runs
+        the same compiled chunk program (``engine.run_engine_chunk``,
+        global round numbers threaded through), and the checkpoint
+        round-trips every dtype exactly (bf16 histories via raw bits).
+        Resume from a **fresh** simulator instance (same constructor
+        arguments): the chain replay, fault schedule, and batch/latency
+        draws are all rebuilt from their named RNG streams, so the
+        rebuilt input planes are byte-identical — whereas reusing a
+        half-run instance would replay the chain from an advanced RNG
+        state.  Pass ``resume=False`` to ignore (and overwrite) existing
+        checkpoints.
+
+        Numerics match ``run()`` (same per-round op sequence; XLA may
+        fuse chunk boundaries differently, so cross-entry comparisons are
+        allclose, not bitwise — the bitwise contract is between
+        checkpointed runs).
+        """
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        t0 = time.time()
+        T = self.s.t_global_rounds
+        inp = _engine.build_inputs(self)
+        carry = _engine.init_engine_carry(inp, self.history_dtype)
+        keys = ("accuracy", "loss", "delta", "clock", "energy")
+        outs = {k: np.zeros((0,), np.float32) for k in keys}
+        t_done = 0
+        if resume:
+            step = _ckpt.latest_step(ckpt_dir)
+            if step is not None:
+                like = {"carry": carry,
+                        "outs": {k: np.zeros((step,), np.float32)
+                                 for k in keys}}
+                state, _ = _ckpt.restore_checkpoint(ckpt_dir, like, step)
+                carry, outs, t_done = state["carry"], state["outs"], step
+                if progress:
+                    print(f"  resumed from checkpoint @ t={t_done}")
+        while t_done < T:
+            t1 = min(t_done + every, T)
+            seg = _engine.run_engine_chunk(
+                _engine.slice_rounds(inp, t_done, t1), carry,
+                jnp.int32(t_done), aggregator=self.aggregator,
+                normalize=self.normalize, history_dtype=self.history_dtype,
+                kernel_mode=self.kernel_mode)
+            (acc, loss, delta, clock, energy), carry = seg
+            for k, v in zip(keys, (acc, loss, delta, clock, energy)):
+                outs[k] = np.concatenate([outs[k],
+                                          np.asarray(v, np.float32)])
+            t_done = t1
+            _ckpt.save_checkpoint(ckpt_dir, t_done,
+                                  {"carry": carry, "outs": outs},
+                                  metadata={"t": t_done})
+            if progress:
+                print(f"  t={t_done:3d} acc={outs['accuracy'][-1]:.4f} "
+                      f"clock={outs['clock'][-1]:.1f}s  [checkpointed]")
+        return RunResult(
+            accuracy=outs["accuracy"], loss=outs["loss"],
+            grad_norm=outs["delta"], wall_time=time.time() - t0,
+            sim_latency=self.paper_latency(),
+            blocks=len(self.chain.blocks) - 1,
+            chain_valid=self.chain.validate(), sim_clock=outs["clock"],
+            sim_energy=outs["energy"])
+
     # ---------------------------------------------------------- legacy run
     def run_legacy(self, progress: bool = False) -> RunResult:
         """The original per-edge Python loop (numerics reference).
@@ -397,6 +504,10 @@ class BHFLSimulator:
         if self.pop is not None:
             raise ValueError(
                 "population mode runs on the engine path only; use run()")
+        if self.fault_spec.any_faults:
+            raise ValueError(
+                "stochastic fault injection (repro.fl.faults) runs on the "
+                "engine path only; use run()")
         s = self.s
         t0 = time.time()
         batch_rng = rng_streams.stream_rng(self.seed, "batches")
@@ -419,6 +530,10 @@ class BHFLSimulator:
         round_ctr = 0        # edge-round counter (t*K + k) for masks/lr
 
         failed_edge: Optional[int] = None
+        # failover availability is DERIVED per run, never written back to
+        # self.edge_masks — a repeated run sees pristine simulator state
+        # (matches the engine path's replay-derived edge_avail plane)
+        edge_avail = np.ones(self.N, dtype=bool)
         for t in range(1, s.t_global_rounds + 1):
             # ---- Raft: overlap leader election with the K edge rounds
             _, elect_t = self.chain.elect_leader()
@@ -429,7 +544,7 @@ class BHFLSimulator:
                 failed_edge = self.chain.leader
                 self.chain.fail_node(failed_edge)
             if failed_edge is not None:
-                self.edge_masks[t - 1:, failed_edge] = False
+                edge_avail[failed_edge] = False
             edge_models = None
             for k in range(1, s.k_edge_rounds + 1):
                 lr = paper_lr(jnp.asarray(round_ctr), s.lr0, s.lr_decay)
@@ -458,7 +573,7 @@ class BHFLSimulator:
                 round_ctr += 1
 
             # ---- global aggregation on the leader + block commit
-            emask = jnp.asarray(self.edge_masks[t - 1])
+            emask = jnp.asarray(self.edge_masks[t - 1] & edge_avail)
             j_arr = jnp.asarray(self.j_per_edge, jnp.float32)
             global_w, glob_hist, glob_last = self._global_agg(
                 edge_models, emask, t, glob_hist, glob_last, j_arr)

@@ -90,12 +90,21 @@ from repro.launch.sharding import sweep_data_spec, sweep_spec
 #: ``cons_time``/``cons_energy`` planes (unlike ``aggregation``, which
 #: needs the traced "switched" program), so a mixed raft/pofel/sharded
 #: grid is pure data.
+#: The fault-plane fields (``edge_fail_rate`` … ``stall_backoff``) batch
+#: for the same reason as the consensus zoo: faults only change host-side
+#: planes — the submission/edge masks and the replayed chain's
+#: ``cons_time``/``cons_energy`` draws — never array shapes, so an
+#: "accuracy vs fault rate x consensus protocol" degradation grid is ONE
+#: padded call (see ``repro.fl.faults`` and benchmarks/bench_faults.py).
 BATCHED_FIELDS = frozenset({
     "straggler_frac", "gamma0", "lam", "t_cold_boot", "classes_per_device",
     "lr0", "lr_decay", "permanent_stop_round", "seed",
     "lm_device", "lp_device", "lm_edge", "link_latency", "consensus_mult",
     "consensus", "n_shards",
     "staleness_discount", "delay_delta",
+    "edge_fail_rate", "edge_recover_rate", "val_fail_rate",
+    "val_recover_rate", "burst_prob", "burst_frac", "msg_loss_prob",
+    "max_stall_rounds", "stall_backoff",
 })
 
 #: Pseudo-field accepted in override dicts (NOT a ``BHFLSetting`` field):

@@ -1,14 +1,16 @@
-"""Benchmark-emission smoke: the latency bench harness runs in-test.
+"""Benchmark-emission smoke: the bench harnesses run in-test.
 
-``benchmarks.run --only latency --emit-json --smoke`` must execute end to
-end at a seconds-scale budget and emit a schema-valid
-``BENCH_latency.json`` — including the consensus block the zoo added —
-so the artifact path can't rot silently between releases.
+``benchmarks.run --only latency --emit-json --smoke`` (and the chaos
+plane's ``--only faults``) must execute end to end at a seconds-scale
+budget and emit schema-valid ``BENCH_latency.json`` /
+``BENCH_faults.json`` — so the artifact paths can't rot silently between
+releases.
 """
 import json
 import sys
 
 import numpy as np
+import pytest
 
 from benchmarks import run as bench_run
 from benchmarks.fig7_latency import ZOO_POINTS, sweep_overrides
@@ -50,3 +52,34 @@ def test_latency_bench_smoke_emits_schema_valid_json(tmp_path, monkeypatch):
         # the consensus_mc suite's job
         assert row["rel_err_latency"] <= 0.25, name
         assert row["rel_err_energy"] <= 0.25, name
+
+
+@pytest.mark.chaos
+def test_faults_bench_smoke_emits_schema_valid_json(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    monkeypatch.setattr(sys, "argv", ["run", "--only", "faults",
+                                      "--emit-json", "--smoke"])
+    bench_run.main()
+
+    data = json.loads((tmp_path / "BENCH_faults.json").read_text())
+    for key in ("setting", "t_global_rounds", "points", "buckets",
+                "seconds", "edge_recover_rate", "val_recover_rate",
+                "max_stall_rounds", "protocols", "curves"):
+        assert key in data, key
+    assert data["setting"] == "REDUCED"
+    # the acceptance criterion: the whole fault_rate x consensus grid runs
+    # as ONE padded sweep call
+    assert data["buckets"] == 1
+    assert data["points"] >= 6
+    assert set(data["protocols"]) == {"raft", "pofel", "sharded"}
+    for proto in data["protocols"]:
+        curve = data["curves"][proto]
+        assert curve["edge_fail"] and curve["val_fail"], proto
+        rates = [r["rate"] for r in curve["edge_fail"]]
+        assert rates == sorted(rates) and rates[0] == 0.0
+        for row in curve["edge_fail"] + curve["val_fail"]:
+            for key in ("rate", "final_acc", "acc_drop", "final_clock_s"):
+                assert np.isfinite(row[key]), (proto, key)
+            assert 0.0 <= row["final_acc"] <= 1.0
+        # the clean baseline defines drop=0 for its own protocol
+        assert curve["edge_fail"][0]["acc_drop"] == 0.0

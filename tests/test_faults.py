@@ -1,0 +1,307 @@
+"""Chaos-plane pins: fault schedules, churn replay, quorum stall, resume.
+
+The ``chaos`` marker mirrors ``kernel_oracle``/``consensus_mc``: the whole
+file also runs in tier-1, and the CI fault-injection job re-runs it alone
+(``-m chaos``) as the focused signal when a fault-plane change breaks an
+invariant.  Pinned contracts:
+
+  * schedule compilation — determinism, shapes, zero-rate inertness,
+    Markov stationarity, exact burst sizes;
+  * ``fail_leader_at`` reproduces bitwise through the one-event schedule
+    path, with NO simulator-state mutation (the replay-mutation bug);
+  * ``recover_node`` is wired: fail→recover restores quorum and the
+    closed-form ``n_alive`` latency/energy track the replay, all three
+    protocols;
+  * below-quorum mid-run: bounded stall-then-raise, with
+    ``max_stall_rounds=0`` reproducing the immediate raise;
+  * checkpoint crash safety + killed-run resume parity (bitwise).
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs.bhfl_cnn import REDUCED
+from repro.core.consensus import CONSENSUS_MODELS, make_chain
+from repro.fl import BHFLSimulator, FaultSpec, compile_schedule, run_sweep
+from repro.fl import faults as faults_mod
+
+pytestmark = pytest.mark.chaos
+
+TINY = dataclasses.replace(REDUCED, t_global_rounds=4, n_edges=3,
+                           j_per_edge=3, image_hw=8)
+KW = dict(n_train=300, n_test=100, steps_per_epoch=2)
+
+
+# ------------------------------------------------------- schedule compiler
+def test_zero_spec_is_inert_and_validated():
+    sc = compile_schedule(FaultSpec(), t_rounds=6, k_rounds=2, n_edges=4,
+                          j_per_edge=[3, 3, 3, 3], seed=0)
+    assert sc.inert
+    assert sc.edge_down.shape == (6, 4)
+    assert sc.val_down.shape == (6, 1, 4)       # S=0 -> one attempt tick
+    assert sc.dev_drop.shape == (12, 4, 3)
+    assert sc.edge_msg_drop.shape == (6, 4)
+    with pytest.raises(ValueError, match="probability"):
+        FaultSpec(edge_fail_rate=1.5)
+    with pytest.raises(ValueError, match="max_stall_rounds"):
+        FaultSpec(max_stall_rounds=-1)
+    with pytest.raises(ValueError, match="leader_crash_round"):
+        FaultSpec(leader_crash_round=0)
+
+
+def test_schedule_is_deterministic_per_seed():
+    spec = FaultSpec(edge_fail_rate=0.3, edge_recover_rate=0.5,
+                     val_fail_rate=0.2, val_recover_rate=0.6,
+                     burst_prob=0.4, msg_loss_prob=0.1, max_stall_rounds=2)
+    kw = dict(t_rounds=8, k_rounds=2, n_edges=4, j_per_edge=[2, 3, 4, 3])
+    a = compile_schedule(spec, seed=7, **kw)
+    b = compile_schedule(spec, seed=7, **kw)
+    c = compile_schedule(spec, seed=8, **kw)
+    for f in ("edge_down", "val_down", "dev_drop", "edge_msg_drop"):
+        assert (getattr(a, f) == getattr(b, f)).all(), f
+    assert any((getattr(a, f) != getattr(c, f)).any()
+               for f in ("edge_down", "val_down", "dev_drop",
+                         "edge_msg_drop"))
+    assert a.val_down.shape == (8, 3, 4)        # [T, S+1, N]
+
+
+def test_markov_stationary_down_fraction():
+    # two-state chain: stationary P[down] = f / (f + r)
+    sc = compile_schedule(
+        FaultSpec(edge_fail_rate=0.3, edge_recover_rate=0.5),
+        t_rounds=4000, k_rounds=1, n_edges=4, j_per_edge=[2] * 4, seed=0)
+    assert abs(sc.edge_down.mean() - 0.375) < 0.03
+
+
+def test_burst_takes_exact_fraction_of_real_devices():
+    j_per_edge = [3, 5, 2]
+    sc = compile_schedule(
+        FaultSpec(burst_prob=1.0, burst_frac=0.5),
+        t_rounds=5, k_rounds=2, n_edges=3, j_per_edge=j_per_edge, seed=1)
+    J = max(j_per_edge)
+    for e, j_e in enumerate(j_per_edge):
+        want = int(np.ceil(0.5 * j_e))
+        per_round = sc.dev_drop[:, e, :].sum(axis=1)
+        assert (per_round == want).all(), (e, per_round)
+        # never drops a padded slot
+        assert not sc.dev_drop[:, e, j_e:J].any()
+        # a burst spans the whole global round (both K edge rounds)
+        assert (sc.dev_drop[0::2, e] == sc.dev_drop[1::2, e]).all()
+
+
+# ----------------------------------------- leader-crash drill (satellite 1)
+def test_fail_leader_is_a_one_event_schedule_bitwise():
+    """fail_leader_at=t and FaultSpec(leader_crash_round=t) are the same
+    schedule — and neither consumes any fault-stream draws."""
+    r1 = BHFLSimulator(TINY, fail_leader_at=2, **KW).run()
+    r2 = BHFLSimulator(TINY, faults=FaultSpec(leader_crash_round=2),
+                       **KW).run()
+    assert (r1.accuracy == r2.accuracy).all()
+    assert (r1.sim_clock == r2.sim_clock).all()
+    assert (r1.sim_energy == r2.sim_energy).all()
+
+
+def test_failover_replay_never_mutates_simulator_state():
+    sim = BHFLSimulator(TINY, fail_leader_at=2, **KW)
+    masks_before = sim.edge_masks.copy()
+    r1 = sim.run()
+    assert (sim.edge_masks == masks_before).all(), \
+        "replay_chain wrote the failover into sim.edge_masks"
+    r2 = sim.run()   # repeated run: bitwise repeatable under leader crash
+    assert (r1.accuracy == r2.accuracy).all()
+    assert (sim.edge_masks == masks_before).all()
+    assert sim.chain.alive.sum() == sim.N - 1   # the one crash, applied once
+
+
+def test_legacy_failover_leaves_masks_pristine():
+    sim = BHFLSimulator(TINY, fail_leader_at=2, **KW)
+    masks_before = sim.edge_masks.copy()
+    sim.run_legacy()
+    assert (sim.edge_masks == masks_before).all()
+
+
+# ------------------------------------------- recover_node (satellite 2)
+@pytest.mark.parametrize("proto", sorted(CONSENSUS_MODELS))
+def test_recover_restores_quorum_and_closed_forms_track(proto):
+    """fail→recover cycle: quorum is lost, recover_node restores it, and
+    the closed-form n_alive latency/energy track the MC replay in every
+    regime (all-up, degraded-but-quorate, recovered)."""
+    N, rounds = 5, 300
+    spec = CONSENSUS_MODELS[proto]
+    params = spec.make_params(0.05, 2)
+
+    def mc(chain, n):
+        c0, e0 = chain.clock, chain.energy
+        for t in range(n):
+            chain.elect_leader()
+            chain.commit_block(f"e@{t}", f"g@{t}")
+        return (chain.clock - c0) / n, (chain.energy - e0) / n
+
+    chain = make_chain(proto, N, link_latency=0.05, n_shards=2, seed=0)
+    lat_up, en_up = mc(chain, rounds)
+    assert abs(lat_up - spec.expected_latency(params, N)) \
+        / spec.expected_latency(params, N) < 0.1
+    assert abs(en_up - spec.expected_energy(params, N)) \
+        / spec.expected_energy(params, N) < 0.1
+
+    # fail the highest id (the closed forms' prefix-alive convention):
+    # still quorate at 4/5 — latency/energy shift to the n_alive=4 forms
+    chain.fail_node(N - 1)
+    lat_deg, en_deg = mc(chain, rounds)
+    want_lat = spec.expected_latency(params, N, 4)
+    want_en = spec.expected_energy(params, N, 4)
+    assert abs(lat_deg - want_lat) / want_lat < 0.1
+    assert abs(en_deg - want_en) / want_en < 0.1
+
+    # lose quorum outright, then recover: recover_node restores service
+    chain.fail_node(N - 2)
+    chain.fail_node(N - 3)
+    with pytest.raises(RuntimeError, match="majority"):
+        chain.elect_leader()
+    for i in (N - 1, N - 2, N - 3):
+        chain.recover_node(i)
+    assert chain.n_alive() == N
+    lat_rec, en_rec = mc(chain, rounds)
+    assert abs(lat_rec - spec.expected_latency(params, N)) \
+        / spec.expected_latency(params, N) < 0.1
+    assert abs(en_rec - spec.expected_energy(params, N)) \
+        / spec.expected_energy(params, N) < 0.1
+
+
+def test_replay_tracks_validator_churn_closed_forms():
+    """Engine-path cons_energy varies over rounds under churn, matching
+    the chain's own per-round energy (the alive count moved)."""
+    FT = dataclasses.replace(TINY, val_fail_rate=0.4, val_recover_rate=0.6,
+                             max_stall_rounds=4)
+    sim = BHFLSimulator(FT, **KW)
+    r = sim.run()
+    per_round = np.diff(np.concatenate([[0.0], r.sim_energy]))
+    assert len(set(np.round(per_round, 6))) > 1, \
+        "validator churn should modulate per-round consensus energy"
+
+
+# --------------------------------------- quorum stall policy (satellite 3)
+@pytest.mark.parametrize("proto", sorted(CONSENSUS_MODELS))
+def test_mid_run_below_quorum_stalls_then_raises(proto):
+    """Crash validators past majority mid-training: max_stall_rounds=0
+    raises immediately (today's semantics); a stall budget with no
+    recovery process raises only after the budget, with the backoff
+    visible in the error-free rounds' clock."""
+    setting = dataclasses.replace(TINY, consensus=proto)
+    # permanent validator outage: fail, never recover -> quorum eventually
+    # lost for good (edge_fail also fails the chain node each round)
+    dead = dataclasses.replace(setting, edge_fail_rate=0.9,
+                               edge_recover_rate=0.0)
+    with pytest.raises(RuntimeError, match="majority|quorum|no live"):
+        BHFLSimulator(dead, **KW).run()
+
+    stalled = dataclasses.replace(dead, max_stall_rounds=2)
+    with pytest.raises(RuntimeError, match="stalled below quorum"):
+        BHFLSimulator(stalled, **KW).run()
+
+
+def test_stall_backoff_lands_in_the_traced_clock():
+    """A transient quorum loss that recovers mid-stall costs exactly the
+    exponential backoff in the consensus draw (stalled_round), and the
+    engine clock accounts it as C2 stall."""
+    chain = make_chain("raft", 3, link_latency=0.05, n_shards=2, seed=0)
+    spec = FaultSpec(max_stall_rounds=3, stall_backoff=0.5)
+    sched = compile_schedule(spec, t_rounds=2, k_rounds=1, n_edges=3,
+                             j_per_edge=[1, 1, 1], seed=0)
+    # attempts 0 and 1 of round 1 are below quorum; attempt 2 recovers
+    sched.val_down[0, 0] = [True, True, False]
+    sched.val_down[0, 1] = [True, True, False]
+    sched.val_down[0, 2] = [False, False, False]
+    elapsed, energy, attempts, _ = faults_mod.stalled_round(chain, 1, sched)
+    assert attempts == 2
+    # two failed attempts: 0.5 * 2**0 + 0.5 * 2**1 = 1.5 s of backoff
+    chain2 = make_chain("raft", 3, link_latency=0.05, n_shards=2, seed=0)
+    clean, _, _, _ = faults_mod.stalled_round(
+        chain2, 1, compile_schedule(spec, t_rounds=2, k_rounds=1,
+                                    n_edges=3, j_per_edge=[1, 1, 1], seed=0))
+    assert elapsed == pytest.approx(clean + 1.5)
+
+
+# ------------------------------------- checkpoint crash safety (satellite 4)
+def test_ckpt_writer_killed_between_tmp_and_rename(tmp_path, monkeypatch):
+    d = str(tmp_path / "ck")
+    tree = {"w": np.arange(6, dtype=np.float32).reshape(2, 3)}
+    ckpt.save_checkpoint(d, 1, tree, metadata={"t": 1})
+
+    real_replace = os.replace
+
+    def killed(src, dst):
+        raise KeyboardInterrupt("writer killed between tmp-write and rename")
+
+    monkeypatch.setattr(ckpt.os, "replace", killed)
+    with pytest.raises(KeyboardInterrupt):
+        ckpt.save_checkpoint(d, 2, {"w": tree["w"] * 2}, metadata={"t": 2})
+    monkeypatch.setattr(ckpt.os, "replace", real_replace)
+
+    # the interrupted step never became visible; the prior one survives
+    assert ckpt.latest_step(d) == 1
+    restored, meta = ckpt.restore_checkpoint(d, like=tree)
+    assert (restored["w"] == tree["w"]).all()
+    assert meta == {"t": 1}
+
+
+# --------------------------------------------- resumable runs (tentpole)
+def _fresh_sim():
+    return BHFLSimulator(TINY, fail_leader_at=2, **KW)
+
+
+def test_killed_run_resumes_bitwise(tmp_path):
+    straight = _fresh_sim().run_checkpointed(str(tmp_path / "a"), every=1)
+
+    # run to completion in dir b, then simulate a kill after round 2 by
+    # deleting the later checkpoints; a fresh simulator must resume from
+    # the survivor and finish bitwise-identically
+    _fresh_sim().run_checkpointed(str(tmp_path / "b"), every=1)
+    for t in range(3, TINY.t_global_rounds + 1):
+        os.remove(tmp_path / "b" / f"step_{t:08d}.npz")
+    assert ckpt.latest_step(str(tmp_path / "b")) == 2
+    resumed = _fresh_sim().run_checkpointed(str(tmp_path / "b"), every=1)
+
+    assert (resumed.accuracy == straight.accuracy).all()
+    assert (resumed.sim_clock == straight.sim_clock).all()
+    assert (resumed.loss == straight.loss).all()
+    assert (resumed.sim_energy == straight.sim_energy).all()
+
+
+def test_checkpointed_matches_plain_run():
+    plain = _fresh_sim().run()
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        chunked = _fresh_sim().run_checkpointed(d, every=2)
+    np.testing.assert_allclose(chunked.accuracy, plain.accuracy,
+                               rtol=0, atol=1e-6)
+    np.testing.assert_allclose(chunked.sim_clock, plain.sim_clock,
+                               rtol=1e-6)
+
+
+# ---------------------------------------------------- sweep fabric parity
+def test_fault_fields_batch_in_one_sweep_call():
+    """A fault-rate x consensus grid is data-batched: the padded sweep
+    reproduces each point's standalone engine run bitwise."""
+    overrides = [
+        {"consensus": "raft", "edge_fail_rate": 0.0},
+        {"consensus": "raft", "edge_fail_rate": 0.4,
+         "edge_recover_rate": 0.5},
+        {"consensus": "pofel", "val_fail_rate": 0.25,
+         "val_recover_rate": 0.9, "max_stall_rounds": 5},
+        # sharded is quorum-fragile (a 1-node shard below quorum can't be
+        # stalled through) — exercise it on the chain-free fault axes
+        {"consensus": "sharded", "burst_prob": 0.5, "burst_frac": 0.5,
+         "msg_loss_prob": 0.1},
+    ]
+    res = run_sweep(TINY, overrides=overrides, **KW)
+    for p, (ov, seed) in enumerate(res.points):
+        alone = BHFLSimulator(dataclasses.replace(TINY, **ov),
+                              seed=seed, **KW).run()
+        np.testing.assert_allclose(res.accuracy[p], alone.accuracy,
+                                   atol=1e-6, err_msg=str(ov))
+        np.testing.assert_allclose(res.sim_clock[p], alone.sim_clock,
+                                   rtol=1e-5)
